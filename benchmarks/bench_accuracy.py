@@ -1,0 +1,65 @@
+"""Paper Fig. 7 — end-to-end simulation accuracy vs ground truth.
+
+Ground truth = real XLA-CPU execution of tiny-scale models; simulator = fused
+backend with CPU-profiled operators.  Per-(mode, family) calibration factors
+are fitted on TWO calibration models (gemma=dense, olmoe=moe) — the paper's
+"re-calibrated according to the profiling results" — then evaluated on
+HELD-OUT architectures (yi, qwen2.5, phi4 dense; deepseek-v3 MoE+MLA).
+The paper's headline: overall error < 5.35 %.
+"""
+from __future__ import annotations
+
+from benchmarks.common import make_cpu_simulator, measure_real, simulate
+from repro.configs import get_tiny_config
+
+# decode at (8, 512): large enough to beat single-core timing jitter, small
+# enough that the container's ~0.7 GB/s effective bf16 stream bandwidth does
+# not reduce the step to a pure cache-copy microbenchmark (see EXPERIMENTS.md)
+MODES = [("train", 2, 128), ("prefill", 2, 256), ("decode", 8, 512)]
+CALIB_MODELS = {"dense": "gemma-7b", "moe": "olmoe-1b-7b"}
+HELDOUT = [
+    ("llama3-8b(analogue)", "yi-34b", "dense"),
+    ("qwen3-8b(analogue)", "qwen2.5-32b", "dense"),
+    ("phi4-mini", "phi4-mini-3.8b", "dense"),
+    ("qwen3-30b-a3b(analogue)", "deepseek-v3-671b", "moe"),
+]
+
+
+def run() -> list[dict]:
+    sim = make_cpu_simulator("fused")
+    # ---- calibration pass (paper: calibrated slowdown factors) ----
+    calib: dict[tuple[str, str], float] = {}
+    for fam, arch in CALIB_MODELS.items():
+        cfg = get_tiny_config(arch)
+        for mode, B, S in MODES:
+            real = measure_real(cfg, mode=mode, B=B, S=S)
+            pred = simulate(sim, cfg, mode=mode, B=B, S=S)
+            calib[(mode, fam)] = real / pred
+    # ---- held-out evaluation ----
+    rows = []
+    for name, arch, fam in HELDOUT:
+        cfg = get_tiny_config(arch)
+        for mode, B, S in MODES:
+            real = measure_real(cfg, mode=mode, B=B, S=S)
+            pred = simulate(sim, cfg, mode=mode, B=B, S=S,
+                            calib=calib[(mode, fam)])
+            err = abs(pred - real) / real * 100
+            rows.append({"bench": "fig7_accuracy", "case": f"{name}/{mode}",
+                         "real_us": round(real, 1), "sim_us": round(pred, 1),
+                         "error_pct": round(err, 2)})
+    sim.db.save()
+    tp_errs = [r["error_pct"] for r in rows if "/decode" not in r["case"]]
+    dec_errs = [r["error_pct"] for r in rows if "/decode" in r["case"]]
+    rows.append({"bench": "fig7_accuracy", "case": "OVERALL(train+prefill,held-out)",
+                 "error_pct": round(sum(tp_errs) / len(tp_errs), 2),
+                 "max_error_pct": round(max(tp_errs), 2),
+                 "paper_claim": "overall error < 5.35%",
+                 "calibration": {f"{m}/{f}": round(v, 3)
+                                 for (m, f), v in calib.items()}})
+    rows.append({"bench": "fig7_accuracy", "case": "OVERALL(decode,held-out)",
+                 "error_pct": round(sum(dec_errs) / len(dec_errs), 2),
+                 "max_error_pct": round(max(dec_errs), 2),
+                 "caveat": "XLA-CPU copies loop-carried KV caches (no in-place "
+                           "aliasing through while bodies) — a backend artifact "
+                           "absent on TPU; see EXPERIMENTS.md §Accuracy"})
+    return rows

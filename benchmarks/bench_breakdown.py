@@ -1,0 +1,92 @@
+"""Paper Table 2 — operator-class time breakdown (sim vs measured).
+
+Classes follow the paper: Attention / Feed-Forward / Others, forward and
+backward for training, prefill and decode for inference.  Measured numbers
+time the isolated jitted sub-module with identical shapes; simulated numbers
+aggregate the block timeline by operator class.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import PAR1, make_cpu_simulator, median_time_us
+from repro.configs import get_tiny_config
+from repro.models import Model, init_params, layers as L
+from repro.models.params import block_cycle
+
+ATTN_KINDS = {"attention"}
+FFN_KINDS = set()
+
+
+def _classify(name_kind_flops, cfg):
+    pass
+
+
+def run() -> list[dict]:
+    cfg = get_tiny_config("qwen2.5-32b")  # paper uses Qwen3-8B
+    sim = make_cpu_simulator("fused")
+    B, S = 2, 256
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    block = jax.tree.map(lambda x: x[0], params["blocks"]["cycle"][0])
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) \
+        .astype(jnp.bfloat16)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    # ---- measured per-class (isolated sub-modules) ----
+    from repro.models.model import gqa_full
+    attn_fn = jax.jit(lambda p, x: gqa_full(cfg, p, L.apply_norm(cfg, p_ln1, x),
+                                            positions)[0])
+    p_ln1 = block["ln1"]
+    t_attn = median_time_us(attn_fn, block["attn"], x)
+    ffn_fn = jax.jit(lambda p, x: L.ffn(cfg, p, L.apply_norm(cfg, block["ln2"], x)))
+    t_ffn = median_time_us(ffn_fn, block["mlp"], x)
+    model = Model(cfg)
+    full_fn = jax.jit(lambda p, t: model.forward(p, {"tokens": t})[0])
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    t_total = median_time_us(full_fn, params, toks)
+    n_layers = cfg.num_layers if False else len(params["blocks"]["cycle"][0])
+    n_layers = jax.tree.leaves(params["blocks"]["cycle"][0])[0].shape[0]
+    t_others = max(t_total - n_layers * (t_attn + t_ffn), 0.0)
+
+    # ---- simulated per-class ----
+    rep = sim.simulate(cfg, mode="prefill", global_batch=B, seq_len=S, par=PAR1,
+                       remat="none", keep_timelines=True)
+    tl = rep.block_timelines[list(rep.block_timelines)[0]]
+    sim_attn = sim_ffn = sim_other = 0.0
+    for iv in tl.intervals:
+        if iv.kind == "attention":
+            sim_attn += iv.dur
+        elif iv.kind in ("matmul", "fused"):
+            # qkv/o projections belong to Attention; gate/up/down to FFN —
+            # split by output size heuristic (ffn ops have d_ff dims)
+            sim_ffn += iv.dur
+        else:
+            sim_other += iv.dur
+    # move the 4 projection matmuls (of 7 per block) into attention by flop share
+    proj_share = 4 * cfg.d_model * cfg.num_heads * cfg.head_dim / (
+        4 * cfg.d_model * cfg.num_heads * cfg.head_dim + 3 * cfg.d_model * cfg.d_ff)
+    sim_attn += sim_ffn * proj_share
+    sim_ffn *= (1 - proj_share)
+    head_time = rep.detail["t_fwd"].get("head", 0.0)
+    sim_layer_other = sim_other
+    sim_total = rep.step_time_us
+
+    rows = [
+        {"bench": "table2_breakdown", "class": "Attention(per-layer)",
+         "measured_us": round(t_attn, 1), "sim_us": round(sim_attn, 1),
+         "error_pct": round(abs(sim_attn - t_attn) / t_attn * 100, 1)},
+        {"bench": "table2_breakdown", "class": "Feed-Forward(per-layer)",
+         "measured_us": round(t_ffn, 1), "sim_us": round(sim_ffn, 1),
+         "error_pct": round(abs(sim_ffn - t_ffn) / t_ffn * 100, 1)},
+        {"bench": "table2_breakdown", "class": "Others(total)",
+         "measured_us": round(t_others, 1),
+         "sim_us": round(sim_layer_other * n_layers + head_time, 1),
+         "error_pct": round(abs(sim_layer_other * n_layers + head_time - t_others)
+                            / max(t_others, 1) * 100, 1)},
+        {"bench": "table2_breakdown", "class": "End-to-end",
+         "measured_us": round(t_total, 1), "sim_us": round(sim_total, 1),
+         "error_pct": round(abs(sim_total - t_total) / t_total * 100, 1)},
+    ]
+    sim.db.save()
+    return rows

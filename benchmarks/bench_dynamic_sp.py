@@ -1,0 +1,40 @@
+"""Paper §5.1 — dynamic sequence-parallel planning case study.
+
+Static zigzag (every request at full SP with zigzag chunking) vs the
+simulator-planned per-request SP assignment over batches with heterogeneous
+sequence lengths.  Paper: ~15% average attention-latency reduction on
+LLaMA-3 70B / 8 GPUs, driven by short requests avoiding all-gather overhead.
+We mirror with qwen2.5-32b head geometry on an 8-chip v5e SP group.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving.sp_planner import plan_batch
+
+WORKLOADS = {
+    "uniform_short": [256, 384, 512, 256, 448, 320, 512, 384],
+    "uniform_long": [16384, 12288, 16384, 8192],
+    "bimodal(paper-like)": [512, 16384, 256, 8192, 384, 32768, 640, 1024],
+    "power_law": [int(x) for x in np.random.default_rng(0).pareto(1.5, 10) * 2000 + 256],
+}
+
+
+def run() -> list[dict]:
+    rows = []
+    gains = []
+    for name, lens in WORKLOADS.items():
+        static = plan_batch(lens, d_head=128, n_heads=40, sp_world=8, dynamic=False)
+        dyn = plan_batch(lens, d_head=128, n_heads=40, sp_world=8, dynamic=True)
+        gain = 1.0 - dyn.makespan_us / static.makespan_us
+        gains.append(gain)
+        rows.append({"bench": "sec51_dynamic_sp", "workload": name,
+                     "static_zigzag_us": round(static.makespan_us, 1),
+                     "dynamic_sp_us": round(dyn.makespan_us, 1),
+                     "latency_reduction_pct": round(gain * 100, 1),
+                     "sp_choices": [f"sp{c.sp}{'z' if c.zigzag else ''}"
+                                    for c in dyn.choices]})
+    rows.append({"bench": "sec51_dynamic_sp", "workload": "AVERAGE",
+                 "latency_reduction_pct": round(float(np.mean(gains)) * 100, 1),
+                 "paper_claim": "~15% average attention latency reduction"})
+    return rows

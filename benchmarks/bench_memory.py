@@ -1,0 +1,77 @@
+"""Paper Fig. 9 — memory prediction accuracy.
+
+Ground truth: XLA's buffer-assignment (``compiled.memory_analysis()``) for a
+tiny MoE train step on one device (the paper's FSDP=8 run measured allocator
+stats on GPUs).  Simulated: liveness-based peak from core/memory.py plus the
+static weight/grad/optimizer ledger.  Also cross-checks the dry-run records:
+simulator per-device totals vs XLA per-device temp+args for a full-scale cell.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import PAR1, make_cpu_simulator
+from repro.configs import get_tiny_config
+from repro.launch.specs import input_specs
+from repro.models import Model, abstract_params
+from repro.training.optimizer import make_optimizer
+from repro.training.train_step import make_train_step
+from repro.configs.base import RunConfig, ShapeConfig
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run() -> list[dict]:
+    rows = []
+    # ---- tiny MoE train step vs XLA buffer assignment ----
+    cfg = get_tiny_config("olmoe-1b-7b")
+    B, S = 2, 512
+    run_cfg = RunConfig(model=cfg, shape=ShapeConfig("m", S, B, "train"))
+    opt = make_optimizer("adamw")
+    step = make_train_step(cfg, run_cfg, opt)
+    params = abstract_params(cfg)
+    opt_abs = jax.eval_shape(opt.init, params)
+    state = {"params": params, "opt": opt_abs, "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    compiled = jax.jit(step).lower(state, batch).compile()
+    ma = compiled.memory_analysis()
+    xla_total = ma.argument_size_in_bytes + ma.temp_size_in_bytes
+
+    sim = make_cpu_simulator("analytical")
+    rep = sim.simulate(cfg, mode="train", global_batch=B, seq_len=S, par=PAR1,
+                       remat="none")
+    sim_total = rep.memory.total
+    rows.append({"bench": "fig9_memory", "case": "olmoe-tiny/train(B2,S512)",
+                 "xla_bytes": int(xla_total), "sim_bytes": int(sim_total),
+                 "error_pct": round((sim_total - xla_total) / xla_total * 100, 2),
+                 "paper_claim": "max-allocated error +0.39%"})
+    # component ledger for the record
+    rows.append({"bench": "fig9_memory", "case": "olmoe-tiny/ledger",
+                 **{k: int(v) for k, v in rep.memory.summary().items()}})
+
+    # ---- full-scale cross-check against the dry-run record ----
+    rec_path = REPO / "results" / "dryrun" / "gemma-7b__train_4k__single.json"
+    if rec_path.exists():
+        rec = json.loads(rec_path.read_text())
+        xla_dev = (rec["memory_analysis"]["argument_bytes"]
+                   + rec["memory_analysis"]["temp_bytes"])
+        from repro.core import ParallelConfig, Simulator
+        sim2 = Simulator("tpu_v5e", engine="analytical")
+        par = ParallelConfig(tp=16, dp=16, sp=16, zero_stage=rec["zero_stage"])
+        rep2 = sim2.simulate(get_tiny_config("gemma-7b").replace(
+            **{}), mode="train", global_batch=8, seq_len=128, par=par)
+        from repro.configs import get_config
+        rep2 = sim2.simulate(get_config("gemma-7b"), mode="train",
+                             global_batch=256, seq_len=4096, par=par,
+                             remat="block")
+        rows.append({"bench": "fig9_memory", "case": "gemma-7b/train_4k@v5e-256",
+                     "xla_bytes_per_dev": int(xla_dev),
+                     "sim_bytes_per_dev": int(rep2.memory.total),
+                     "ratio": round(rep2.memory.total / xla_dev, 3),
+                     "note": "XLA temp is buffer-assignment upper bound (no donation aliasing)"})
+    return rows

@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo contract, plus the
+full JSON record to results/benchmarks.json.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+BENCHES = [
+    ("fig7_accuracy", "benchmarks.bench_accuracy"),
+    ("table2_breakdown", "benchmarks.bench_breakdown"),
+    ("fig8_traces", "benchmarks.bench_trace"),
+    ("fig9_memory", "benchmarks.bench_memory"),
+    ("fig10_backend_ablation", "benchmarks.bench_backend_ablation"),
+    ("fig11_scale", "benchmarks.bench_scale"),
+    ("fig13_dse", "benchmarks.bench_explore"),
+    ("sec51_dynamic_sp", "benchmarks.bench_dynamic_sp"),
+    ("fig1_sim_cost", "benchmarks.bench_sim_speed"),
+]
+
+
+def main() -> None:
+    import importlib
+    all_rows = []
+    print("name,us_per_call,derived")
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, module in BENCHES:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        try:
+            rows = importlib.import_module(module).run()
+            status = "ok"
+        except Exception as e:
+            rows = [{"bench": name, "error": f"{type(e).__name__}: {e}",
+                     "traceback": traceback.format_exc()[-2000:]}]
+            status = "error"
+        wall_us = (time.time() - t0) * 1e6
+        derived = json.dumps(rows[-1], default=str).replace(",", ";")
+        print(f"{name},{wall_us:.0f},{status}:{derived[:240]}")
+        all_rows.extend(rows)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "benchmarks.json").write_text(json.dumps(all_rows, indent=1, default=str))
+    # human-readable dump
+    for r in all_rows:
+        print("  ", json.dumps(r, default=str)[:400])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Design-space exploration example (paper Fig. 13 workflow): find the
+serving config maximising TPS/chip under a TPOT SLO for qwen2.5-32b on a
+v5e-256 pod.
+
+    PYTHONPATH=src python examples/explore_configs.py
+"""
+from repro.configs import get_config
+from repro.core import Simulator
+from repro.core.explorer import explore
+
+cfg = get_config("qwen2.5-32b")
+sim = Simulator("tpu_v5e", engine="analytical")
+
+res = explore(sim, cfg, mode="decode", seq_len=8192, chips=256,
+              tp_choices=(4, 8, 16, 32), pp_choices=(1, 2, 4),
+              batch_choices=(16, 32, 64, 128, 256), memory_limit=16e9)
+print(f"evaluated {len(res.evaluated)} configs "
+      f"({len(res.pruned)} pruned) in {res.wall_time_s:.1f}s\n")
+
+print("Pareto frontier (TPS/user vs TPS/chip):")
+for r in res.pareto():
+    p = r.cand.par
+    print(f"  tp{p.tp:<2} pp{p.pp} dp{p.dp:<2} batch{r.cand.global_batch:<4} "
+          f"TPOT {r.report.step_time_us/1e3:6.2f} ms  "
+          f"TPS/user {r.tps_per_user:6.1f}  TPS/chip {r.tps_per_chip:6.2f}  "
+          f"mem {r.report.memory.total/1e9:5.1f} GB")
+
+for slo in (30.0, 15.0, 8.0):
+    best = res.best_under_slo(tpot_ms=slo)
+    if best:
+        p = best.cand.par
+        print(f"\nbest under {slo:.0f} ms TPOT: tp{p.tp}/pp{p.pp}/"
+              f"batch{best.cand.global_batch} -> "
+              f"{best.tps_per_chip:.2f} TPS/chip, "
+              f"{best.report.step_time_us/1e3:.2f} ms TPOT")

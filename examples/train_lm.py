@@ -1,0 +1,18 @@
+"""End-to-end training driver example: trains a reduced qwen2.5 config on CPU
+for a few hundred steps with checkpointing, restart recovery and straggler
+monitoring.  The same driver lowers the full configs on the production mesh
+(see launch/dryrun.py for the compile proof).
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main([
+        "--arch", "qwen2.5-32b", "--tiny",
+        "--steps", "200", "--batch", "8", "--seq", "128",
+        "--optimizer", "adamw", "--remat", "none",
+        "--ckpt-every", "50", "--ckpt-dir", "/tmp/repro_quickstart_ckpt",
+    ] + sys.argv[1:])

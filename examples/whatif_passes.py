@@ -1,0 +1,35 @@
+"""What-if analyses via compiler-style passes (paper §5): evaluate operator
+fusion, int8 quantization, remat policy and the DualPipe schedule WITHOUT
+implementing them in a real compiler — just toggle passes and re-simulate.
+
+    PYTHONPATH=src python examples/whatif_passes.py
+"""
+from repro.configs import get_config
+from repro.core import ParallelConfig, Simulator
+
+cfg = get_config("yi-34b")
+sim = Simulator("tpu_v5e", engine="analytical")
+base_par = ParallelConfig(tp=16, dp=8, pp=2, sp=16, zero_stage=1, microbatches=8)
+
+base = sim.simulate(cfg, mode="train", global_batch=256, seq_len=4096,
+                    par=base_par)
+print(f"{'baseline':28s} {base.step_time_us/1e3:9.1f} ms  MFU {base.mfu:.3f}")
+
+whatifs = {
+    "+ operator fusion": dict(fusion=True),
+    "+ int8 matmul quant": dict(quantize="int8"),
+    "+ remat=dots (save matmuls)": dict(remat="dots"),
+    "+ no remat (memory perm.)": dict(remat="none"),
+}
+for name, kw in whatifs.items():
+    r = sim.simulate(cfg, mode="train", global_batch=256, seq_len=4096,
+                     par=base_par, **kw)
+    print(f"{name:28s} {r.step_time_us/1e3:9.1f} ms  MFU {r.mfu:.3f}  "
+          f"mem {r.memory.total/1e9:.0f} GB  "
+          f"({base.step_time_us/r.step_time_us:.2f}x)")
+
+dual = ParallelConfig(tp=16, dp=8, pp=2, sp=16, zero_stage=1, microbatches=8,
+                      pp_schedule="dualpipe")
+r = sim.simulate(cfg, mode="train", global_batch=256, seq_len=4096, par=dual)
+print(f"{'+ DualPipe schedule':28s} {r.step_time_us/1e3:9.1f} ms  MFU {r.mfu:.3f}  "
+      f"bubble {r.pp.bubble_fraction:.1%} vs {base.pp.bubble_fraction:.1%}")

@@ -1,0 +1,5 @@
+"""repro — Charon-JAX: unified fine-grained LLM training/inference simulator
+plus the JAX/TPU substrate it simulates (model zoo, distributed training,
+serving, Pallas kernels, multi-pod launcher)."""
+
+__version__ = "1.0.0"

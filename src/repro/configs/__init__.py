@@ -1,0 +1,57 @@
+"""Architecture registry: ``--arch <id>`` resolves through here."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig, SHAPES, supports_shape
+
+_ARCH_MODULES = {
+    "qwen2.5-32b": "qwen2_5_32b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "gemma-7b": "gemma_7b",
+    "yi-34b": "yi_34b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "whisper-large-v3": "whisper_large_v3",
+    "xlstm-125m": "xlstm_125m",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    """Full (exact public-literature) config for ``--arch``."""
+    return _module(arch).CONFIG
+
+
+def get_tiny_config(arch: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    return _module(arch).tiny()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def all_cells(include_skipped: bool = False):
+    """Yield every assigned (arch, shape) cell; skips sub-quadratic-only
+    shapes for full-attention archs unless ``include_skipped``."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if include_skipped or supports_shape(cfg, shape):
+                yield arch, shape.name
+
+
+__all__ = [
+    "ModelConfig", "RunConfig", "ShapeConfig", "SHAPES", "ARCH_IDS",
+    "get_config", "get_tiny_config", "get_shape", "all_cells", "supports_shape",
+]

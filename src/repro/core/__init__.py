@@ -1,0 +1,13 @@
+"""Charon simulator core — the paper's primary contribution.
+
+Compiler-style simulation pipeline: native JAX ingestion (tracer/stubs/
+model_ingest) -> parallelism & optimization passes -> multi-engine backend
+(profiling / prediction / analytical, fused fallback) -> scheduler + overlap
+models -> multi-granularity analyses (time, MFU, memory, chrome traces) and
+design-space exploration.
+"""
+from repro.core.ir import Graph, OpNode
+from repro.core.passes.base import ParallelConfig
+from repro.core.simulator import Report, Simulator
+
+__all__ = ["Graph", "OpNode", "Report", "Simulator", "ParallelConfig"]

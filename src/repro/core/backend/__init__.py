@@ -1,0 +1,11 @@
+from repro.core.backend.analytical import AnalyticalEngine
+from repro.core.backend.engine import FusedEngine
+from repro.core.backend.hardware import HARDWARE, HardwareSpec, get_hardware
+from repro.core.backend.prediction import PredictionEngine, RandomForest
+from repro.core.backend.profiling import ProfileDB, ProfilingEngine
+
+__all__ = [
+    "AnalyticalEngine", "FusedEngine", "HARDWARE", "HardwareSpec",
+    "get_hardware", "PredictionEngine", "RandomForest", "ProfileDB",
+    "ProfilingEngine",
+]

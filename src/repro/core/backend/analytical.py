@@ -1,0 +1,72 @@
+"""Analytical engine: roofline for compute, link-centric model for comm.
+
+Compute ops (paper §3.3c): t = max(flops / (peak * eff), bytes / (bw * eff)).
+TPU adaptation: MXU efficiency degrades when matmul dims misalign with the
+128x128 systolic tile / 8-row subtile, and when the working set exceeds VMEM
+(double-buffering stalls).  This replaces CUDA occupancy heuristics — the
+paper's analytical engine is hardware-agnostic by design.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.backend.collectives import GroupSpec, hierarchical_collective_time_us
+from repro.core.backend.hardware import HardwareSpec
+from repro.core.ir import OpNode
+
+_DTYPE_KEY = {"bf16": "bf16", "f16": "bf16", "f32": "f32", "fp32": "f32",
+              "int8": "int8", "f8": "f8", "fp8": "f8"}
+
+
+def mxu_efficiency(node: OpNode, hw: HardwareSpec) -> float:
+    """Alignment-based MXU utilisation for matmul-class ops."""
+    eff = hw.matmul_eff
+    dims = node.attrs.get("mm_dims")  # (M, N, K) when the tracer knows them
+    if not dims:
+        return eff
+    m, n, k = dims
+    for d in (n, k):
+        if d % hw.mxu_dim != 0:
+            eff *= max(0.35, (d % hw.mxu_dim) / hw.mxu_dim if d < hw.mxu_dim
+                       else 1.0 - 0.5 * (hw.mxu_dim - d % hw.mxu_dim) / hw.mxu_dim)
+    if m % hw.sub_dim != 0 and m < hw.sub_dim:
+        eff *= max(0.2, m / hw.sub_dim)
+    # skinny matmuls can't fill the systolic pipeline
+    if min(m, n, k) < hw.mxu_dim // 4:
+        eff *= 0.7
+    return max(eff, 0.05)
+
+
+class AnalyticalEngine:
+    name = "analytical"
+    priority = 10
+
+    def __init__(self, hw: HardwareSpec, *, algorithm: str = "ring"):
+        self.hw = hw
+        self.algorithm = algorithm
+
+    def supports(self, node: OpNode) -> bool:
+        return True  # the universal fallback
+
+    def latency_us(self, node: OpNode) -> float | None:
+        hw = self.hw
+        if node.is_comm:
+            group = GroupSpec(
+                intra_size=node.comm_size if node.comm_group != "pod" else 1,
+                inter_size=node.comm_size if node.comm_group == "pod" else 1,
+            )
+            return hierarchical_collective_time_us(
+                node.kind, node.comm_bytes, group, hw, algorithm=self.algorithm)
+        dtype = _DTYPE_KEY.get(node.dtype, "bf16")
+        peak = hw.flops_for(dtype)
+        eff = mxu_efficiency(node, hw) if node.kind in ("matmul", "attention", "conv", "fused") \
+            else 1.0
+        t_compute = node.flops / (peak * eff) if node.flops else 0.0
+        total_bytes = node.total_bytes
+        if node.kind == "scatter" and not hw.scatter_inplace:
+            # non-aliasing backend copies the whole buffer on functional update
+            total_bytes += 2.0 * node.attrs.get("operand_bytes", 0.0)
+        t_memory = total_bytes / (hw.hbm_bw * hw.mem_eff) if total_bytes else 0.0
+        t = max(t_compute, t_memory)
+        # fixed per-op dispatch overhead (XLA fusion boundary cost)
+        return t * 1e6 + 0.3

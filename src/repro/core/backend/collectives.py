@@ -1,0 +1,104 @@
+"""Hierarchical link-centric collective model (paper §3.3c).
+
+Collectives decompose into physical link-level transfers: per hop the cost is
+calibrated handshake latency + payload / effective bandwidth.  Ring and tree
+algorithms over the chosen link domain; cross-pod ('dp across DCN') groups pay
+the hierarchical price: intra-pod reduce-scatter + inter-pod exchange +
+intra-pod all-gather.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core.backend.hardware import HardwareSpec, LinkDomain
+
+
+def _ring_steps(kind: str, n: int) -> tuple[float, float]:
+    """(#hops, per-hop payload fraction of the FULL buffer) for ring algos."""
+    if n <= 1:
+        return 0.0, 0.0
+    if kind == "all_reduce":
+        return 2.0 * (n - 1), 1.0 / n
+    if kind in ("all_gather", "reduce_scatter"):
+        return float(n - 1), 1.0 / n
+    if kind == "all_to_all":
+        return float(n - 1), 1.0 / n
+    if kind in ("send", "recv", "collective_permute"):
+        return 1.0, 1.0
+    raise ValueError(kind)
+
+
+def _tree_steps(kind: str, n: int) -> tuple[float, float]:
+    if n <= 1:
+        return 0.0, 0.0
+    levels = math.ceil(math.log2(n))
+    if kind == "all_reduce":
+        return 2.0 * levels, 1.0          # reduce + broadcast, full payload/hop
+    return float(levels), 1.0
+
+
+def collective_time_us(kind: str, payload_bytes: float, group_size: int,
+                       link: LinkDomain, *, algorithm: str = "ring",
+                       congestion: float = 1.0) -> float:
+    """Time for one collective over a single link domain.
+
+    ``payload_bytes``: full per-device buffer size.  ``congestion`` > 1 divides
+    the effective bandwidth (bandwidth-aware overlap model, paper §3.4).
+    """
+    if group_size <= 1 or payload_bytes <= 0:
+        return 0.0
+    steps, frac = (_tree_steps if algorithm == "tree" else _ring_steps)(kind, group_size)
+    bw = link.bandwidth * max(link.links_per_chip, 1) / max(congestion, 1.0)
+    per_hop = link.latency_us + (payload_bytes * frac) / bw * 1e6
+    return steps * per_hop
+
+
+@dataclass(frozen=True)
+class GroupSpec:
+    """A communication group: participants within a pod and across pods."""
+    intra_size: int = 1     # group participants inside one pod (ICI)
+    inter_size: int = 1     # pods spanned (DCN)
+
+
+def hierarchical_collective_time_us(kind: str, payload_bytes: float,
+                                    group: GroupSpec, hw: HardwareSpec,
+                                    *, algorithm: str = "ring",
+                                    congestion: float = 1.0) -> float:
+    """Cross-pod collectives decompose hierarchically:
+    intra-pod reduce-scatter -> inter-pod stage on the shard -> intra-pod
+    all-gather (standard hierarchical all-reduce)."""
+    ni, ne = group.intra_size, group.inter_size
+    if ne <= 1:
+        return collective_time_us(kind, payload_bytes, ni, hw.intra,
+                                  algorithm=algorithm, congestion=congestion)
+    if ni <= 1:
+        return collective_time_us(kind, payload_bytes, ne, hw.inter,
+                                  algorithm=algorithm, congestion=congestion)
+    if kind == "all_reduce":
+        t = collective_time_us("reduce_scatter", payload_bytes, ni, hw.intra,
+                               congestion=congestion)
+        t += collective_time_us("all_reduce", payload_bytes / ni, ne, hw.inter,
+                                congestion=congestion)
+        t += collective_time_us("all_gather", payload_bytes, ni, hw.intra,
+                                congestion=congestion)
+        return t
+    # gather/scatter style: do the intra stage then the inter stage on shards
+    t = collective_time_us(kind, payload_bytes, ni, hw.intra, congestion=congestion)
+    t += collective_time_us(kind, payload_bytes / ni, ne, hw.inter,
+                            congestion=congestion)
+    return t
+
+
+def link_traffic_bytes(kind: str, payload_bytes: float, group_size: int) -> float:
+    """Per-device link traffic (used for the roofline collective term)."""
+    n = max(group_size, 1)
+    if n == 1:
+        return 0.0
+    if kind == "all_reduce":
+        return 2.0 * (n - 1) / n * payload_bytes
+    if kind == "all_gather":
+        return (n - 1) * payload_bytes / n
+    if kind in ("reduce_scatter", "all_to_all"):
+        return (n - 1) / n * payload_bytes
+    return payload_bytes

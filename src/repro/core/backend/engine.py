@@ -1,0 +1,51 @@
+"""Backend engine protocol (paper §3.3).
+
+An engine prices a single operator: ``latency_us(node) -> float | None``
+(None = unsupported, the fused engine falls through to the next priority).
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+from repro.core.backend.hardware import HardwareSpec
+from repro.core.ir import OpNode
+
+
+@runtime_checkable
+class Engine(Protocol):
+    name: str
+    priority: int  # higher = preferred by the fused engine
+
+    def supports(self, node: OpNode) -> bool: ...
+
+    def latency_us(self, node: OpNode) -> float | None: ...
+
+
+class FusedEngine:
+    """Priority-fallback over a registry of engines (paper §3.3d).
+
+    Each engine keeps its own supported-operator registry; the fused engine
+    dynamically selects the highest-priority engine for every operator and
+    falls back when an engine declines (returns None)."""
+
+    name = "fused"
+
+    def __init__(self, engines):
+        self.engines = sorted(engines, key=lambda e: -e.priority)
+
+    def supports(self, node: OpNode) -> bool:
+        return any(e.supports(node) for e in self.engines)
+
+    def latency_us(self, node: OpNode) -> float | None:
+        for e in self.engines:
+            if e.supports(node):
+                t = e.latency_us(node)
+                if t is not None:
+                    return t
+        return None
+
+    def engine_for(self, node: OpNode) -> str:
+        for e in self.engines:
+            if e.supports(node) and e.latency_us(node) is not None:
+                return e.name
+        return "none"

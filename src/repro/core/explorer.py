@@ -1,0 +1,151 @@
+"""Design-space exploration with rule-based pruning (paper §3.5, §5.2).
+
+Enumerates (chips, tp, pp, dp, batch, microbatches, ...) configurations,
+prunes known-inefficient subspaces *before* simulating (user-extensible
+rules), simulates the rest, and reports the Pareto frontier over
+(system throughput TPS/chip vs user-facing TPS/user) plus best-under-SLO
+queries — the paper's Fig. 13 workflow.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterable
+
+from repro.configs.base import ModelConfig
+from repro.core.passes.base import ParallelConfig
+from repro.core.simulator import Report, Simulator
+
+
+@dataclass
+class Candidate:
+    par: ParallelConfig
+    global_batch: int
+    extra: dict = field(default_factory=dict)
+
+    def key(self) -> tuple:
+        p = self.par
+        return (p.tp, p.pp, p.dp, p.pods, p.microbatches, self.global_batch)
+
+
+@dataclass
+class EvalResult:
+    cand: Candidate
+    report: Report
+    pruned: bool = False
+    reason: str = ""
+
+    @property
+    def tps_per_chip(self) -> float:
+        return self.report.tps_per_chip
+
+    @property
+    def tps_per_user(self) -> float:
+        # decode: tokens per second seen by one request
+        return 1e6 / self.report.step_time_us if self.report.mode == "decode" else 0.0
+
+
+# -------------------------- pruning rules ---------------------------------
+
+def rule_divisibility(cfg: ModelConfig, c: Candidate) -> str | None:
+    p = c.par
+    if c.global_batch % (p.dp * p.pods) and c.global_batch >= p.dp * p.pods:
+        return "batch not divisible by dp"
+    if p.microbatches > max(c.global_batch // (p.dp * p.pods), 1):
+        return "microbatches exceed local batch"
+    return None
+
+
+def rule_tp_too_wide(cfg: ModelConfig, c: Candidate) -> str | None:
+    if c.par.tp > cfg.d_model // 64:
+        return "tp wider than head granularity"
+    return None
+
+
+def rule_pp_layers(cfg: ModelConfig, c: Candidate) -> str | None:
+    if c.par.pp > cfg.num_layers:
+        return "more stages than layers"
+    return None
+
+
+def rule_memory_fit(hw_bytes: float):
+    def rule(cfg: ModelConfig, c: Candidate, report: Report | None = None) -> str | None:
+        return None
+    return rule
+
+
+DEFAULT_RULES: list[Callable] = [rule_divisibility, rule_tp_too_wide, rule_pp_layers]
+
+
+# -------------------------- exploration -----------------------------------
+
+@dataclass
+class ExplorationResult:
+    evaluated: list[EvalResult]
+    pruned: list[EvalResult]
+    wall_time_s: float
+
+    def pareto(self, x=lambda r: r.tps_per_user, y=lambda r: r.tps_per_chip
+               ) -> list[EvalResult]:
+        """Upper-right Pareto frontier (maximize both)."""
+        pts = sorted(self.evaluated, key=lambda r: (-x(r), -y(r)))
+        front, best_y = [], -math.inf
+        for r in pts:
+            if y(r) > best_y:
+                front.append(r)
+                best_y = y(r)
+        return front
+
+    def best_under_slo(self, *, tpot_ms: float | None = None,
+                       min_tps_user: float | None = None) -> EvalResult | None:
+        ok = self.evaluated
+        if tpot_ms is not None:
+            ok = [r for r in ok if r.report.step_time_us / 1e3 <= tpot_ms]
+        if min_tps_user is not None:
+            ok = [r for r in ok if r.tps_per_user >= min_tps_user]
+        if not ok:
+            return None
+        return max(ok, key=lambda r: r.tps_per_chip)
+
+
+def explore(sim: Simulator, cfg: ModelConfig, *, mode: str = "decode",
+            seq_len: int = 4096, chips: int = 256,
+            tp_choices: Iterable[int] = (1, 2, 4, 8, 16),
+            pp_choices: Iterable[int] = (1, 2, 4),
+            batch_choices: Iterable[int] = (8, 16, 32, 64, 128, 256),
+            micro_choices: Iterable[int] = (1,),
+            rules: list[Callable] | None = None,
+            memory_limit: float | None = None,
+            max_evals: int = 10_000) -> ExplorationResult:
+    rules = DEFAULT_RULES if rules is None else rules
+    t0 = time.time()
+    evaluated: list[EvalResult] = []
+    pruned: list[EvalResult] = []
+    n = 0
+    for tp, pp, gb, m in itertools.product(tp_choices, pp_choices,
+                                           batch_choices, micro_choices):
+        if chips % (tp * pp):
+            continue
+        dp = chips // (tp * pp)
+        par = ParallelConfig(tp=tp, pp=pp, dp=dp, microbatches=m,
+                             ep=tp if cfg.num_experts else 1)
+        cand = Candidate(par, gb)
+        reason = next((r for rule in rules if (r := rule(cfg, cand))), None)
+        if reason:
+            pruned.append(EvalResult(cand, None, pruned=True, reason=reason))
+            continue
+        n += 1
+        if n > max_evals:
+            break
+        rep = sim.simulate(cfg, mode=mode, global_batch=gb, seq_len=seq_len,
+                           par=par, remat="none" if mode != "train" else "block")
+        res = EvalResult(cand, rep)
+        if memory_limit is not None and rep.memory and rep.memory.total > memory_limit:
+            res.pruned = True
+            res.reason = f"memory {rep.memory.total/1e9:.1f}GB > limit"
+            pruned.append(res)
+            continue
+        evaluated.append(res)
+    return ExplorationResult(evaluated, pruned, time.time() - t0)

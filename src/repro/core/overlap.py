@@ -1,0 +1,102 @@
+"""Operator-overlap modeling (paper §3.4).
+
+Two models:
+
+* **ratio-based** — overlapped portions of compute and comm ops are slowed by
+  calibrated per-hardware factors (separate factors for the compute and comm
+  sides of compute<->comm overlap; a shared factor for comm<->comm).
+
+* **bandwidth-aware** (fine-grained, comm<->comm under the analytical
+  engine) — a progressive-filling fluid model: flows sharing a link domain
+  split its effective bandwidth; per overlapped segment each flow advances at
+  bw/n_active, reproducing packet-level congestion behaviour (paper Fig. 6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.backend.hardware import HardwareSpec
+from repro.core.scheduler import Interval, Timeline
+
+
+def _overlap(a: Interval, b: Interval) -> float:
+    return max(0.0, min(a.end, b.end) - max(a.start, b.start))
+
+
+def apply_ratio_overlap(tl: Timeline, hw: HardwareSpec) -> Timeline:
+    """Ratio-based slowdown: only the overlapped fraction of an op is slowed
+    (paper: 'the slowdown factor only applies to the portion overlapped')."""
+    comp = [i for i in tl.intervals if i.stream == "compute"]
+    comm = [i for i in tl.intervals if i.stream != "compute"]
+    extra: dict[int, float] = {}
+    for c in comm:
+        for k in comp:
+            ov = _overlap(c, k)
+            if ov <= 0:
+                continue
+            extra[id(k)] = extra.get(id(k), 0.0) + ov * (hw.overlap_slowdown_compute - 1.0)
+            extra[id(c)] = extra.get(id(c), 0.0) + ov * (hw.overlap_slowdown_comm - 1.0)
+    for i, c1 in enumerate(comm):
+        for c2 in comm[i + 1:]:
+            if c1.stream == c2.stream:
+                continue
+            ov = _overlap(c1, c2)
+            if ov <= 0:
+                continue
+            s = hw.overlap_slowdown_comm_comm - 1.0
+            extra[id(c1)] = extra.get(id(c1), 0.0) + ov * s
+            extra[id(c2)] = extra.get(id(c2), 0.0) + ov * s
+    for iv in tl.intervals:
+        iv.end += extra.get(id(iv), 0.0)
+    return tl
+
+
+def bandwidth_aware_comm(comm_intervals: list[Interval]) -> list[Interval]:
+    """Progressive-filling fluid model for concurrent comm flows sharing one
+    link domain.  Each flow carries ``comm_bytes`` and a standalone duration;
+    rate alone = bytes/duration; with n concurrent flows every flow runs at
+    rate/n (fair bandwidth competition).  Returns intervals with adjusted end
+    times, preserving start order."""
+    flows = sorted(comm_intervals, key=lambda i: i.start)
+    if not flows:
+        return []
+    remaining = {id(f): max(f.comm_bytes, 1e-9) for f in flows}
+    rate1 = {id(f): max(f.comm_bytes, 1e-9) / max(f.dur, 1e-9) for f in flows}
+    finished: dict[int, float] = {}
+    t = flows[0].start
+    active: list[Interval] = []
+    pending = list(flows)
+    while pending or active:
+        while pending and pending[0].start <= t + 1e-12:
+            active.append(pending.pop(0))
+        if not active:
+            t = pending[0].start
+            continue
+        n = len(active)
+        # next event: a flow finishing or a new arrival
+        t_finish = min(t + remaining[id(f)] / (rate1[id(f)] / n) for f in active)
+        t_next = min(t_finish, pending[0].start) if pending else t_finish
+        dt = t_next - t
+        for f in list(active):
+            remaining[id(f)] -= rate1[id(f)] / n * dt
+            if remaining[id(f)] <= 1e-9:
+                finished[id(f)] = t_next
+                active.remove(f)
+        t = t_next
+    out = []
+    for f in flows:
+        nf = Interval(f.name, f.kind, f.stream, f.start,
+                      finished.get(id(f), f.end), f.phase, f.comm_group,
+                      f.comm_bytes, f.repeat, f.engine)
+        out.append(nf)
+    return out
+
+
+def apply_bandwidth_aware(tl: Timeline, hw: HardwareSpec) -> Timeline:
+    """Replace comm intervals with fluid-model adjusted versions, then apply
+    the ratio model for compute<->comm."""
+    comm = [i for i in tl.intervals if i.stream != "compute"]
+    rest = [i for i in tl.intervals if i.stream == "compute"]
+    adjusted = bandwidth_aware_comm(comm)
+    tl2 = Timeline(intervals=rest + adjusted)
+    return apply_ratio_overlap(tl2, hw)

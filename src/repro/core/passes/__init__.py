@@ -1,0 +1,17 @@
+from repro.core.passes.base import ParallelConfig, PassContext, PassManager
+from repro.core.passes.data_parallel import DataParallelPass, optimizer_step_cost
+from repro.core.passes.fusion import FusionPass, FusionRule
+from repro.core.passes.parallelism import (
+    ContextParallelPass, ExpertParallelPass, SequenceParallelPass,
+    TensorParallelPass,
+)
+from repro.core.passes.pipeline import PPSchedule, make_schedule
+from repro.core.passes.quantize import QuantizePass
+from repro.core.passes.recompute import RecomputePass
+
+__all__ = [
+    "ParallelConfig", "PassContext", "PassManager", "DataParallelPass",
+    "optimizer_step_cost", "FusionPass", "FusionRule", "ContextParallelPass",
+    "ExpertParallelPass", "SequenceParallelPass", "TensorParallelPass",
+    "PPSchedule", "make_schedule", "QuantizePass", "RecomputePass",
+]

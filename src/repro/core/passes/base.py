@@ -1,0 +1,59 @@
+"""Compiler-style pass framework (paper §3.2b).
+
+Optimizations, parallelisms and analyses are graph->graph passes; adding or
+removing a pass toggles the corresponding feature in simulation; passes
+compose freely (``PassManager``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Protocol
+
+from repro.core.ir import Graph
+
+
+@dataclass
+class ParallelConfig:
+    """Parallelism sizes the passes shard the graph by."""
+    tp: int = 1
+    dp: int = 1
+    pp: int = 1
+    ep: int = 1
+    sp: int = 1           # Megatron sequence parallelism (within the TP group)
+    pods: int = 1
+    cp: int = 1           # context parallelism
+    zero_stage: int = 0
+    microbatches: int = 1
+    pp_schedule: str = "1f1b"   # 1f1b | dualpipe | gpipe
+
+    @property
+    def chips(self) -> int:
+        return self.tp * self.dp * self.pp * self.pods * self.cp
+
+
+@dataclass
+class PassContext:
+    parallel: ParallelConfig
+    model: object | None = None          # ModelConfig when known
+    param_bytes: float = 0.0             # per pipeline stage, pre-sharding
+    extra: dict = field(default_factory=dict)
+
+
+class Pass(Protocol):
+    name: str
+
+    def apply(self, g: Graph, ctx: PassContext) -> Graph: ...
+
+
+class PassManager:
+    def __init__(self, passes: list | None = None):
+        self.passes = list(passes or [])
+
+    def add(self, p) -> "PassManager":
+        self.passes.append(p)
+        return self
+
+    def run(self, g: Graph, ctx: PassContext) -> Graph:
+        for p in self.passes:
+            g = p.apply(g, ctx)
+        return g

@@ -1,0 +1,96 @@
+"""Dependency-aware operator scheduler (paper §3.2c).
+
+List-schedules a priced graph onto per-rank streams ('compute' plus comm
+streams), honoring data dependencies; overlappable comm ops run on their own
+stream concurrently with compute.  The result feeds the overlap processor
+(core/overlap.py) and the chrome-trace exporter (core/timeline.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.ir import Graph, OpNode
+
+
+@dataclass
+class Interval:
+    name: str
+    kind: str
+    stream: str
+    start: float            # us
+    end: float
+    phase: str = "fwd"
+    comm_group: str = ""
+    comm_bytes: float = 0.0
+    repeat: int = 1
+    engine: str = ""
+
+    @property
+    def dur(self) -> float:
+        return self.end - self.start
+
+
+@dataclass
+class Timeline:
+    intervals: list[Interval] = field(default_factory=list)
+
+    @property
+    def total_time(self) -> float:
+        return max((i.end for i in self.intervals), default=0.0)
+
+    def stream_time(self, stream: str) -> float:
+        return sum(i.dur for i in self.intervals if i.stream == stream)
+
+    def by_kind(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for i in self.intervals:
+            out[i.kind] = out.get(i.kind, 0.0) + i.dur
+        return out
+
+    def by_phase(self) -> dict[str, float]:
+        out: dict[str, float] = {}
+        for i in self.intervals:
+            out[i.phase] = out.get(i.phase, 0.0) + i.dur
+        return out
+
+
+def schedule(graph: Graph, engine, *, expand_repeats: bool = False,
+             max_expand: int = 4096) -> Timeline:
+    """Price every node with ``engine`` and list-schedule.
+
+    ``expand_repeats`` emits one interval per repetition (trace export);
+    otherwise a node with repeat=n occupies n * latency sequentially.
+    """
+    tl = Timeline()
+    stream_free: dict[str, float] = {}
+    done: dict[str, float] = {}
+    eng_name = getattr(engine, "engine_for", None)
+
+    for node in graph.toposort():
+        lat = engine.latency_us(node)
+        if lat is None:
+            lat = 0.0
+        stream = node.stream if (node.overlappable or node.stream != "compute") \
+            else "compute"
+        dep_ready = max((done.get(d, 0.0) for d in node.deps), default=0.0)
+        reps = node.repeat if expand_repeats and node.repeat <= max_expand else 1
+        dur_total = lat * (node.repeat if reps == 1 else 1)
+        t = max(stream_free.get(stream, 0.0), dep_ready)
+        for r in range(reps):
+            iv = Interval(
+                name=node.name if reps == 1 else f"{node.name}#{r}",
+                kind=node.kind, stream=stream, start=t, end=t + dur_total,
+                phase=node.phase, comm_group=node.comm_group,
+                comm_bytes=node.comm_bytes * (node.repeat if reps == 1 else 1),
+                repeat=node.repeat,
+                engine=eng_name(node) if eng_name else getattr(engine, "name", ""),
+            )
+            tl.intervals.append(iv)
+            t = iv.end
+        stream_free[stream] = t
+        done[node.name] = t
+    return tl
+
+
+def graph_time_us(graph: Graph, engine) -> float:
+    return schedule(graph, engine).total_time

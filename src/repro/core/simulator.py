@@ -1,0 +1,254 @@
+"""Simulator facade: end-to-end LLM training/inference performance prediction.
+
+Composition (paper Fig. 3): native ingestion (model_ingest/tracer) ->
+parallelism & optimization passes -> multi-engine operator pricing ->
+dependency-aware scheduling + overlap modeling -> multi-granularity reports
+(end-to-end time, MFU, memory, per-op breakdown, chrome traces, PP timeline).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.backend.analytical import AnalyticalEngine
+from repro.core.backend.collectives import GroupSpec, hierarchical_collective_time_us
+from repro.core.backend.engine import FusedEngine
+from repro.core.backend.hardware import HARDWARE, HardwareSpec
+from repro.core.backend.prediction import PredictionEngine
+from repro.core.backend.profiling import ProfileDB, ProfilingEngine
+from repro.core.ir import Graph
+from repro.core.memory import MemoryReport, simulate_memory
+from repro.core.model_ingest import ModelGraphs, block_graphs
+from repro.core.overlap import apply_bandwidth_aware, apply_ratio_overlap
+from repro.core.passes.base import ParallelConfig, PassContext, PassManager
+from repro.core.passes.data_parallel import optimizer_step_cost
+from repro.core.passes.fusion import FusionPass
+from repro.core.passes.parallelism import (
+    ContextParallelPass, ExpertParallelPass, SequenceParallelPass,
+    TensorParallelPass,
+)
+from repro.core.passes.pipeline import PPSchedule, make_schedule
+from repro.core.passes.quantize import QuantizePass
+from repro.core.passes.recompute import RecomputePass
+from repro.core.scheduler import Timeline, schedule
+from repro.models.kvcache import cache_bytes
+from repro.models.params import count_params
+
+
+@dataclass
+class Report:
+    mode: str
+    step_time_us: float
+    chips: int
+    tokens_per_step: float
+    tokens_per_s: float
+    tps_per_chip: float
+    mfu: float
+    model_flops: float
+    breakdown_us: dict = field(default_factory=dict)     # phase -> us
+    kind_us: dict = field(default_factory=dict)          # op kind -> us
+    memory: MemoryReport | None = None
+    pp: PPSchedule | None = None
+    block_timelines: dict = field(default_factory=dict)  # kind -> Timeline
+    detail: dict = field(default_factory=dict)
+
+    # serving metrics
+    @property
+    def tpot_ms(self) -> float:
+        return self.step_time_us / 1e3 if self.mode == "decode" else float("nan")
+
+    @property
+    def ttft_ms(self) -> float:
+        return self.step_time_us / 1e3 if self.mode == "prefill" else float("nan")
+
+
+class Simulator:
+    def __init__(self, hw: str | HardwareSpec = "tpu_v5e",
+                 engine: str = "analytical", db: ProfileDB | None = None,
+                 *, overlap: str = "ratio", measure_on_miss: bool = False):
+        self.hw = HARDWARE[hw] if isinstance(hw, str) else hw
+        self.db = db or ProfileDB()
+        self.overlap = overlap
+        engines = []
+        if engine in ("fused", "profiling"):
+            engines.append(ProfilingEngine(self.hw, self.db,
+                                           measure_on_miss=measure_on_miss))
+        if engine in ("fused", "prediction"):
+            engines.append(PredictionEngine(self.hw, self.db))
+        engines.append(AnalyticalEngine(self.hw))
+        if engine == "analytical":
+            engines = [AnalyticalEngine(self.hw)]
+        elif engine == "profiling":
+            engines = [engines[0], engines[-1]]
+        elif engine == "prediction":
+            engines = [e for e in engines if e.name in ("prediction", "analytical")]
+        self.engine = FusedEngine(engines)
+
+    # ------------------------------------------------------------------
+    def _passes(self, cfg: ModelConfig, par: ParallelConfig, *,
+                fusion: bool, quantize: str | None, remat: str,
+                train: bool) -> PassManager:
+        pm = PassManager()
+        pm.add(TensorParallelPass())
+        if cfg.num_kv_heads % max(par.tp, 1) != 0:
+            # heads unshardable -> Ulysses-style context parallelism on the
+            # same chips (mirrors the substrate's divisibility fallback)
+            pm.add(ContextParallelPass(cp=par.tp))
+        if par.sp > 1:
+            pm.add(SequenceParallelPass())
+        if cfg.num_experts:
+            pm.add(ExpertParallelPass(cfg.num_experts))
+        if fusion:
+            pm.add(FusionPass())
+        if quantize:
+            pm.add(QuantizePass(quantize))
+        if train and remat != "none":
+            pm.add(RecomputePass(remat))
+        return pm
+
+    def _time(self, g: Graph) -> tuple[float, Timeline]:
+        tl = schedule(g, self.engine)
+        tl = (apply_bandwidth_aware if self.overlap == "bandwidth"
+              else apply_ratio_overlap)(tl, self.hw)
+        return tl.total_time, tl
+
+    # ------------------------------------------------------------------
+    def simulate(self, cfg: ModelConfig, *, mode: str = "train",
+                 global_batch: int = 8, seq_len: int = 2048,
+                 par: ParallelConfig | None = None, remat: str = "block",
+                 optimizer: str = "adamw", fusion: bool = False,
+                 quantize: str | None = None, cache_len: int = 0,
+                 keep_timelines: bool = False) -> Report:
+        par = par or ParallelConfig()
+        if par.cp == 1 and cfg.num_kv_heads % max(par.tp, 1) != 0:
+            par.cp = 1  # cp shares the tp axis; chips unchanged
+        dp_total = max(par.dp * par.pods, 1)
+        B_local = max(global_batch // dp_total, 1)
+        S = seq_len if mode != "decode" else 1
+        train = mode == "train"
+
+        mg = block_graphs(cfg, B_local, seq_len if mode != "decode" else 1,
+                          mode, cache_len=cache_len or seq_len)
+        ctx = PassContext(parallel=par, model=cfg)
+        pm = self._passes(cfg, par, fusion=fusion, quantize=quantize,
+                          remat=remat, train=train)
+
+        t_fwd = {}
+        t_bwd = {}
+        kind_us: dict[str, float] = {}
+        timelines = {}
+        for bg in mg.all_blocks():
+            # set cp on the shared tp axis when heads are unshardable
+            eff_par = par
+            fwd = pm.run(bg.fwd.clone(), ctx)
+            tf, tlf = self._time(fwd)
+            t_fwd[bg.kind] = tf
+            for k, v in tlf.by_kind().items():
+                kind_us[k] = kind_us.get(k, 0.0) + v * bg.repeat
+            if keep_timelines:
+                timelines[bg.kind] = tlf
+            if train and bg.joint is not None:
+                joint = pm.run(bg.joint.clone(), ctx)
+                tj, _ = self._time(joint)
+                t_bwd[bg.kind] = max(tj - tf, tf)  # bwd >= fwd in practice
+            else:
+                t_bwd[bg.kind] = 0.0
+
+        # ---- stack totals ----
+        dec_blocks = [b for b in mg.blocks]
+        total_layers = sum(b.repeat for b in dec_blocks)
+        t_f_layers = sum(t_fwd[b.kind] * b.repeat for b in dec_blocks)
+        t_b_layers = sum(t_bwd[b.kind] * b.repeat for b in dec_blocks)
+        t_f_head = t_fwd.get("head", 0.0)
+        t_b_head = t_bwd.get("head", 0.0)
+        t_f_enc = t_fwd.get("enc", 0.0) * (mg.encoder.repeat if mg.encoder else 0)
+        t_b_enc = t_bwd.get("enc", 0.0) * (mg.encoder.repeat if mg.encoder else 0)
+
+        pp, m = par.pp, max(par.microbatches, 1)
+        # inter-stage p2p payload per microbatch
+        act_bytes = B_local * (seq_len if mode != "decode" else 1) * cfg.d_model * 2 / m
+        t_p2p = hierarchical_collective_time_us(
+            "send", act_bytes, GroupSpec(intra_size=2), self.hw)
+
+        if train:
+            t_f_stage = (t_f_layers / pp + (t_f_enc + t_f_head) / pp) / m
+            t_b_stage = (t_b_layers / pp + (t_b_enc + t_b_head) / pp) / m
+            sched = make_schedule(par.pp_schedule, pp, m, t_f_stage, t_b_stage, t_p2p)
+            t_compute = sched.total_time
+            # DP gradient sync (overlappable with backward) + optimizer
+            n_params = count_params(cfg)
+            shard = par.tp * pp * (max(par.ep, 1) if cfg.num_experts else 1)
+            grad_bytes = 2 * n_params / max(shard, 1)
+            t_dp = hierarchical_collective_time_us(
+                "all_reduce" if par.zero_stage == 0 else "reduce_scatter",
+                grad_bytes, GroupSpec(par.dp, par.pods), self.hw)
+            if par.zero_stage >= 1:
+                t_dp += hierarchical_collective_time_us(
+                    "all_gather", grad_bytes, GroupSpec(par.dp, par.pods), self.hw)
+            bwd_window = sched.total_time * (t_b_stage / max(t_f_stage + t_b_stage, 1e-9))
+            exposed_dp = max(0.0, t_dp - 0.8 * bwd_window) + 0.2 * t_dp
+            o_flops, o_bytes = optimizer_step_cost(
+                n_params / max(shard, 1), optimizer=optimizer,
+                zero_stage=par.zero_stage, dp=dp_total)
+            from repro.models.params import param_logical_axes
+            n_leaves = len(jax.tree.leaves(
+                param_logical_axes(cfg), is_leaf=lambda x: isinstance(x, tuple)))
+            t_opt = max(o_flops / self.hw.flops_for("f32"),
+                        o_bytes / self.hw.hbm_bw) * 1e6 \
+                + 3 * n_leaves * self.hw.dispatch_us  # m/v/p update dispatches
+            total = t_compute + exposed_dp + t_opt
+            breakdown = {"fwd": t_f_layers + t_f_enc + t_f_head,
+                         "bwd": t_b_layers + t_b_enc + t_b_head,
+                         "pp_bubble": sched.total_time - (t_f_layers + t_b_layers
+                                                          + t_f_enc + t_b_enc
+                                                          + t_f_head + t_b_head) / pp,
+                         "dp_sync_exposed": exposed_dp, "optimizer": t_opt}
+        else:
+            sched = None
+            total = t_f_layers + t_f_enc + t_f_head + (pp - 1) * t_p2p
+            breakdown = {"fwd": t_f_layers + t_f_enc + t_f_head,
+                         "pp_latency": (pp - 1) * t_p2p}
+
+        # ---- metrics ----
+        chips = par.chips
+        n_active = count_params(cfg, active_only=True)
+        tokens = global_batch * (seq_len if mode != "decode" else 1)
+        model_flops = (6 if train else 2) * n_active * tokens
+        peak = self.hw.flops_for("bf16")
+        mfu = model_flops / (chips * peak * total / 1e6) if total else 0.0
+
+        # ---- memory ----
+        first = dec_blocks[0]
+        param_dev = 2 * count_params(cfg) / max(par.tp * pp, 1)
+        if cfg.num_experts and par.ep > 1:
+            pass  # expert shard already inside tp*pp approximation
+        if par.zero_stage >= 3:
+            param_dev /= dp_total
+        # KV cache shards over the model axis (heads when divisible, else the
+        # KV sequence — see models/kvcache.py)
+        kvb = cache_bytes(cfg, B_local, cache_len or seq_len) / max(par.tp, 1) \
+            if mode == "decode" else 0.0
+        mem = simulate_memory(
+            pm.run(first.fwd.clone(), ctx), n_layers=total_layers // pp,
+            param_bytes=param_dev,
+            boundary_bytes=B_local * (seq_len if mode != "decode" else 1)
+            * cfg.d_model * 2 / max(par.sp, 1),
+            mode="train" if train else mode, optimizer=optimizer,
+            zero_stage=par.zero_stage, dp=dp_total, tp=par.tp, remat=remat,
+            kv_cache_bytes=kvb,
+            block_joint=pm.run(first.joint.clone(), ctx) if train and first.joint else None)
+
+        return Report(
+            mode=mode, step_time_us=total, chips=chips,
+            tokens_per_step=tokens,
+            tokens_per_s=tokens / (total / 1e6) if total else 0.0,
+            tps_per_chip=tokens / (total / 1e6) / chips if total else 0.0,
+            mfu=mfu, model_flops=model_flops,
+            breakdown_us=breakdown, kind_us=kind_us, memory=mem, pp=sched,
+            block_timelines=timelines,
+            detail={"t_fwd": t_fwd, "t_bwd": t_bwd, "B_local": B_local,
+                    "par": par},
+        )

@@ -1,0 +1,52 @@
+"""Chrome-trace export: PyTorch-profiler-style timelines (paper §3.2c).
+
+``to_chrome_trace`` emits a single-rank timeline; ``pp_trace`` emits the 3D
+multi-GPU view (pid = "dp{i}|pp{j}", tid = stream) from a PPSchedule plus
+per-rank op timelines.  Load the JSON in chrome://tracing or Perfetto.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.passes.pipeline import PPSchedule
+from repro.core.scheduler import Timeline
+
+_CAT = {"matmul": "compute", "attention": "compute", "fused": "compute",
+        "norm": "compute", "elementwise": "compute", "softmax": "compute",
+        "reduce": "compute", "all_reduce": "comm", "all_gather": "comm",
+        "reduce_scatter": "comm", "all_to_all": "comm", "send": "comm",
+        "recv": "comm", "collective_permute": "comm"}
+
+
+def to_chrome_trace(tl: Timeline, *, pid: str = "rank0",
+                    expand_limit: int = 20000) -> list[dict]:
+    events = []
+    for iv in tl.intervals[:expand_limit]:
+        events.append({
+            "name": iv.name, "cat": _CAT.get(iv.kind, "other"), "ph": "X",
+            "ts": iv.start, "dur": iv.dur, "pid": pid, "tid": iv.stream,
+            "args": {"kind": iv.kind, "phase": iv.phase, "engine": iv.engine,
+                     "repeat": iv.repeat, "comm_bytes": iv.comm_bytes},
+        })
+    return events
+
+
+def pp_trace(sched: PPSchedule, *, dp_rank: int = 0) -> list[dict]:
+    events = []
+    for e in sched.events:
+        events.append({
+            "name": f"{e.kind}{e.microbatch}", "cat": "pp", "ph": "X",
+            "ts": e.start, "dur": e.end - e.start,
+            "pid": f"dp{dp_rank}|pp{e.rank}", "tid": "pipeline",
+            "args": {"microbatch": e.microbatch, "kind": e.kind},
+        })
+    return events
+
+
+def write_trace(events: list[dict], path: str | Path):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps({"traceEvents": events,
+                                "displayTimeUnit": "ms"}))
+    return path

@@ -1,0 +1,159 @@
+"""Logical-axis sharding with divisibility-aware resolution.
+
+MaxText-style: model code annotates tensors with *logical* axis names; a rule
+table maps logical names to mesh axes.  The resolver drops mesh axes that do
+not divide the concrete dimension (e.g. qwen2.5's 40 heads on a 16-wide model
+axis), which is what makes one model implementation lower correctly across
+every (arch x shape x mesh) cell.
+
+Usage:
+    env = ShardingEnv(mesh)            # rules default to DEFAULT_RULES
+    with activate(env):
+        lowered = jax.jit(step).lower(...)
+
+Inside model code:
+    x = logical_constraint(x, ("batch", "seq", "embed"))
+is a no-op when no env is active (single-device tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from dataclasses import dataclass, field, replace
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes, in order; multi-axis entries shard jointly.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),                 # unsharded by default
+    "seq_sp": ("model",),      # Megatron-SP residual stream (norms, embeddings, logits)
+    "seq_cp": ("model",),      # context-parallel attention (Ulysses-style)
+    "kv_seq": ("model",),      # decode-time KV sequence sharding (flash-decode)
+    "embed": (),
+    "embed_tp": ("model",),    # row-parallel input dim
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "q_per_kv": (),
+    "head_dim": (),
+    "ffn": ("model",),
+    "expert": ("model",),
+    "expert_group": ("pod", "data"),   # MoE dispatch groups track the DP axes
+    "expert_ffn": (),
+    "lru_width": ("model",),
+    "conv": (),
+    "layer": (),               # scan-stacked leading dim: never sharded
+    "fsdp": ("data",),         # ZeRO-3 parameter sharding axis
+    "none": (),
+}
+
+
+@dataclass(frozen=True)
+class ShardingEnv:
+    mesh: Mesh
+    rules: dict[str, tuple[str, ...]] = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def with_rules(self, **overrides: tuple[str, ...]) -> "ShardingEnv":
+        r = dict(self.rules)
+        r.update(overrides)
+        return replace(self, rules=r)
+
+
+_tls = threading.local()
+
+
+def active_env() -> ShardingEnv | None:
+    return getattr(_tls, "env", None)
+
+
+@contextlib.contextmanager
+def activate(env: ShardingEnv):
+    prev = active_env()
+    _tls.env = env
+    try:
+        yield env
+    finally:
+        _tls.env = prev
+
+
+def axis_size(name: str, env: ShardingEnv | None = None) -> int:
+    """Size of a mesh axis (1 if absent / no env)."""
+    env = env or active_env()
+    if env is None or name not in env.mesh.axis_names:
+        return 1
+    return env.mesh.shape[name]
+
+
+def _mesh_axis_prod(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes) if axes else 1
+
+
+def resolve_spec(env: ShardingEnv, logical_axes: tuple[str | None, ...],
+                 shape: tuple[int, ...]) -> P:
+    """Map logical axes -> PartitionSpec, dropping non-dividing / reused axes.
+
+    Multi-axis rules (e.g. batch -> (pod, data)) degrade gracefully: axes are
+    dropped from the front until the product divides the dimension.
+    """
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    mesh = env.mesh
+    used: set[str] = set()
+    entries = []
+    for logical, dim in zip(logical_axes, shape):
+        if logical is None:
+            entries.append(None)
+            continue
+        cands = tuple(a for a in env.rules.get(logical, ())
+                      if a in mesh.axis_names and a not in used)
+        while cands and dim % _mesh_axis_prod(mesh, cands) != 0:
+            cands = cands[1:]
+        if not cands:
+            entries.append(None)
+        else:
+            used.update(cands)
+            entries.append(cands if len(cands) > 1 else cands[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def logical_sharding(logical_axes: tuple[str | None, ...], shape: tuple[int, ...],
+                     env: ShardingEnv | None = None) -> NamedSharding | None:
+    env = env or active_env()
+    if env is None:
+        return None
+    return NamedSharding(env.mesh, resolve_spec(env, logical_axes, shape))
+
+
+def logical_constraint(x: jax.Array, logical_axes: tuple[str | None, ...]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without an active env."""
+    env = active_env()
+    if env is None:
+        return x
+    s = logical_sharding(logical_axes, x.shape, env)
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def fsdp_spec(env: ShardingEnv, logical_axes: tuple[str | None, ...],
+              shape: tuple[int, ...], *, skip_leading: int = 0) -> P:
+    """Add the fsdp ('data') axis to the first eligible dim of a parameter
+    spec (ZeRO-3 / FSDP parameter sharding).  ``skip_leading`` protects the
+    scan-stacked layer dim."""
+    base = resolve_spec(env, logical_axes, shape)
+    entries = list(base) + [None] * (len(shape) - len(base))
+    used = {a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))}
+    fsdp_axes = tuple(a for a in env.rules.get("fsdp", ()) if a in env.mesh.axis_names)
+    if not fsdp_axes or any(a in used for a in fsdp_axes):
+        return base
+    size = _mesh_axis_prod(env.mesh, fsdp_axes)
+    for i in range(skip_leading, len(shape)):
+        if entries[i] is None and shape[i] % size == 0:
+            entries[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+            break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)

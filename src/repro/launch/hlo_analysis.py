@@ -1,0 +1,331 @@
+"""Optimized-HLO analysis: trip-count-aware FLOPs / HBM bytes / collectives.
+
+``compiled.cost_analysis()`` counts every while-loop (scan) body ONCE, which
+under-reports depth-scanned models by ~num_layers x.  This module re-derives
+the roofline inputs directly from the per-device optimized HLO text:
+
+  * execution counts per computation (while bodies scaled by
+    ``backend_config.known_trip_count``; nested loops multiply),
+  * dot FLOPs (2 * prod(out dims) * prod(contracting dims)),
+  * HBM traffic model: every materialising top-level instruction reads its
+    operands and writes its output once (XLA fuses elementwise chains, so
+    `fusion` nodes approximate real buffer traffic),
+  * collective inventory with ring-algorithm per-device link traffic:
+      all-gather          (n-1) * operand      (operand = local shard)
+      reduce-scatter      (n-1)/n * operand    (operand = full local buffer)
+      all-reduce          2 (n-1)/n * operand
+      all-to-all          (n-1)/n * operand
+      collective-permute  operand
+
+All shapes in the post-SPMD module are per-device, so every number reported
+here is per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_SHAPE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPCODE = re.compile(r"^(?:\([^=]*\)|\S+)\s+([\w\-]+)\(")
+_OPND = re.compile(r"%([\w.\-]+)")
+_TRIP = re.compile(r'known_trip_count[":{\s]+n["\s:]+(\d+)')
+_CALLED = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "partition-id", "replica-id", "iota",
+    # loop-carry copies alias on the TPU target (CPU-backend artifact)
+    "copy", "copy-start", "copy-done",
+    # the CPU backend computes in f32 and materialises bf16<->f32 converts
+    # around every op; on TPU converts fuse into producers/consumers
+    "convert",
+}
+
+
+def _shape_dims(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str, *, all_parts: bool) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        total += _shape_dims(dims) * _DTYPE_BYTES[dt]
+        if not all_parts:
+            break
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    rhs: str
+    out_bytes: float
+    out_dims: tuple[int, ...]
+    out_dtype: str
+    operands: list[str]
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    is_entry: bool = False
+
+    def dus_update_bytes(self, shape_of) -> float | None:
+        """If this (fused) computation performs dynamic-update-slice, return
+        the update-slice traffic: on the TPU target the buffer updates in
+        place, so pricing the full output is wrong (the CPU backend's
+        materialisation is a backend artifact)."""
+        total = None
+        for ins in self.instrs:
+            if ins.opcode == "dynamic-update-slice" and len(ins.operands) >= 2:
+                dims, dt = shape_of.get(ins.operands[1], ((), ""))
+                if dt:
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    total = (total or 0.0) + n * _DTYPE_BYTES.get(dt, 4)
+        return total
+
+
+def parse_module(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo_text.splitlines():
+        hdr = _COMP_HDR.match(raw)
+        if hdr:
+            cur = Computation(hdr.group(2), is_entry=bool(hdr.group(1)))
+            comps[cur.name] = cur
+            continue
+        if raw.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(raw)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # split off the leading (possibly tuple) result type via paren depth
+        if rhs.startswith("("):
+            depth, i = 0, 0
+            for i, ch in enumerate(rhs):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            lead, rest = rhs[:i + 1], rhs[i + 1:].lstrip()
+        else:
+            parts = rhs.split(None, 1)
+            lead, rest = parts[0], parts[1] if len(parts) > 1 else ""
+        opcode = rest.split("(")[0].strip() if "(" in rest else rest.split()[0] if rest else ""
+        sm = _SHAPE.search(lead)
+        out_dims: tuple[int, ...] = ()
+        out_dtype = ""
+        if sm:
+            out_dtype = sm.group(1)
+            out_dims = tuple(int(d) for d in sm.group(2).split(",") if d)
+        out_bytes = _shapes_bytes(lead, all_parts=rhs.startswith("("))
+        # operands: names in the paren group right after the opcode
+        operands: list[str] = []
+        if "(" in rest:
+            operands = _OPND.findall(rest.split("(", 1)[1].split(")")[0])
+        cur.instrs.append(Instr(name, opcode, rhs, out_bytes, out_dims, out_dtype, operands))
+    return comps
+
+
+def execution_counts(comps: dict[str, Computation]) -> dict[str, float]:
+    """Propagate execution multipliers from ENTRY through call sites."""
+    counts = {name: 0.0 for name in comps}
+    for name, c in comps.items():
+        if c.is_entry:
+            counts[name] = 1.0
+    # iterate to fixpoint (call graph is a DAG; few passes suffice)
+    for _ in range(len(comps) + 2):
+        changed = False
+        for name, c in comps.items():
+            base = counts[name]
+            if base <= 0:
+                continue
+            for ins in c.instrs:
+                called = _CALLED.findall(ins.rhs)
+                if not called:
+                    continue
+                mult = base
+                if ins.opcode == "while":
+                    tm = _TRIP.search(ins.rhs)
+                    mult = base * (int(tm.group(1)) if tm else 1)
+                for cal in called:
+                    if cal in counts and counts[cal] < mult:
+                        counts[cal] = mult
+                        changed = True
+        if not changed:
+            break
+    return counts
+
+
+def _dot_flops(ins: Instr, shape_of: dict[str, tuple[tuple[int, ...], str]]) -> float:
+    out_n = 1
+    for d in ins.out_dims:
+        out_n *= d
+    cm = _CONTRACT.search(ins.rhs)
+    contract = 1
+    if cm and ins.operands:
+        lhs = shape_of.get(ins.operands[0])
+        if lhs:
+            for idx in cm.group(1).split(","):
+                if idx and int(idx) < len(lhs[0]):
+                    contract *= lhs[0][int(idx)]
+    return 2.0 * out_n * contract
+
+
+@dataclass
+class Collective:
+    kind: str
+    name: str
+    comp: str
+    operand_bytes: float
+    output_bytes: float
+    group_size: int
+    mult: float = 1.0
+
+    @property
+    def traffic_bytes(self) -> float:
+        n = max(self.group_size, 1)
+        b = self.operand_bytes
+        if self.kind == "all-gather":
+            t = (n - 1) * b
+        elif self.kind == "all-reduce":
+            t = 2.0 * (n - 1) / n * b
+        elif self.kind in ("reduce-scatter", "all-to-all"):
+            t = (n - 1) / n * b
+        else:
+            t = b
+        return t * self.mult
+
+
+def analyze_module(hlo_text: str) -> dict:
+    comps = parse_module(hlo_text)
+    counts = execution_counts(comps)
+
+    shape_of: dict[str, tuple[tuple[int, ...], str]] = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            shape_of[ins.name] = (ins.out_dims, ins.out_dtype)
+
+    def op_bytes(name: str) -> float:
+        if name not in shape_of:
+            return 0.0
+        dims, dt = shape_of[name]
+        if not dt:
+            return 0.0
+        n = 1
+        for d in dims:
+            n *= d
+        return n * _DTYPE_BYTES.get(dt, 4)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    colls: list[Collective] = []
+    while_info: list[dict] = []
+
+    for cname, c in comps.items():
+        mult = counts.get(cname, 0.0)
+        if mult <= 0:
+            continue
+        for ins in c.instrs:
+            if ins.opcode == "while":
+                tm = _TRIP.search(ins.rhs)
+                while_info.append({"name": ins.name, "comp": cname,
+                                   "trip_count": int(tm.group(1)) if tm else None})
+            if ins.opcode == "dot":
+                flops += _dot_flops(ins, shape_of) * mult
+            coll_kind = next((k for k in _COLL_KINDS
+                              if re.match(rf"{k}(-start)?$", ins.opcode)), None)
+            if coll_kind:
+                ob = sum(op_bytes(o) for o in ins.operands)
+                gm = _GROUPS_IOTA.search(ins.rhs)
+                if gm:
+                    gsize = int(gm.group(2))
+                else:
+                    gl = _GROUPS_LIST.search(ins.rhs)
+                    gsize = len(gl.group(1).split(",")) if gl else 1
+                colls.append(Collective(coll_kind, ins.name, cname, ob,
+                                        ins.out_bytes, gsize, mult))
+            if ins.opcode in _NO_TRAFFIC_OPS or ins.opcode.endswith("-done"):
+                continue
+            if ins.opcode in ("dynamic-slice", "slice", "gather"):
+                # a slice READS only the slice (plus indices), not the operand
+                # (e.g. per-layer weight slices from the scan-stacked params)
+                hbm_bytes += 2.0 * ins.out_bytes * mult
+                continue
+            if ins.opcode in ("fusion", "dynamic-update-slice"):
+                # in-place accumulator updates: price the slice, not the buffer
+                if ins.opcode == "dynamic-update-slice":
+                    # update operand = smallest non-scalar operand (operand
+                    # order can be permuted by fusion parameter rewriting)
+                    cand = [op_bytes(o) for o in ins.operands[1:]]
+                    cand = [b for b in cand if b > 8]
+                    upd = min(cand) if cand else None
+                else:
+                    called = _CALLED.findall(ins.rhs)
+                    upd = None
+                    for cal in called:
+                        if cal in comps:
+                            upd = comps[cal].dus_update_bytes(shape_of)
+                            break
+                if upd is not None:
+                    # exclude the aliased accumulator operand; keep the rest
+                    alias = next((o for o in ins.operands
+                                  if abs(op_bytes(o) - ins.out_bytes) < 1.0), None)
+                    rest = sum(op_bytes(o) for o in ins.operands if o != alias)
+                    hbm_bytes += (rest + 2.0 * upd) * mult
+                    continue
+            opb = sum(op_bytes(o) for o in ins.operands)
+            hbm_bytes += (ins.out_bytes + opb) * mult
+
+    by_kind: dict[str, dict] = {}
+    for cl in colls:
+        d = by_kind.setdefault(cl.kind, {"count": 0, "operand_bytes": 0.0,
+                                         "traffic_bytes": 0.0})
+        d["count"] += int(cl.mult) if cl.mult >= 1 else 1
+        d["operand_bytes"] += cl.operand_bytes * cl.mult
+        d["traffic_bytes"] += cl.traffic_bytes
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collectives": {
+            "by_kind": by_kind,
+            "count": sum(d["count"] for d in by_kind.values()),
+            "operand_bytes": sum(d["operand_bytes"] for d in by_kind.values()),
+            "traffic_bytes": sum(d["traffic_bytes"] for d in by_kind.values()),
+        },
+        "while_loops": while_info,
+        "n_computations": len(comps),
+    }
+
+
+def collective_summary(hlo_text: str) -> dict:
+    return analyze_module(hlo_text)["collectives"]

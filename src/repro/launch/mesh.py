@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (TPU v5e pod,
+(data, model)).  Multi-pod: 2x16x16 = 512 chips with a leading "pod" axis —
+data parallelism crosses pods over DCN; "data"/"model" stay intra-pod on ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    # Explicit Auto axis types: GSPMD propagation semantics, stable across
+    # the jax 0.9 default flip.
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests / exploration)."""
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))

@@ -1,0 +1,60 @@
+"""Serving driver: continuous batching over a Poisson request stream with
+SLO accounting.  CPU-runnable with tiny configs; full configs target the
+production mesh (decode cells compile-proven by dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --tiny \
+        --requests 12 --slots 4 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_tiny_config
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-7b", choices=list(ARCH_IDS))
+    ap.add_argument("--tiny", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ttft-slo-ms", type=float, default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_tiny_config(args.arch) if args.tiny else get_config(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    engine = ServingEngine(cfg, params, slots=args.slots, cache_len=args.cache_len)
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.perf_counter()
+    for rid in range(args.requests):
+        plen = int(rng.integers(4, args.prompt_len))
+        prompt = rng.integers(0, cfg.vocab_size, plen).tolist()
+        engine.submit(Request(rid=rid, prompt=prompt, max_new_tokens=args.max_new))
+    finished = engine.run_until_drained()
+    wall = time.perf_counter() - t0
+
+    toks = sum(len(r.tokens) for r in finished)
+    ttfts = [r.ttft_s * 1e3 for r in finished if r.ttft_s is not None]
+    print(f"served {len(finished)}/{args.requests} requests, {toks} tokens, "
+          f"{wall*1e3:.0f} ms wall ({toks/wall:.1f} tok/s)")
+    print(f"TTFT ms: p50={np.percentile(ttfts, 50):.1f} "
+          f"p95={np.percentile(ttfts, 95):.1f} max={max(ttfts):.1f}")
+    if args.ttft_slo_ms is not None:
+        ok = sum(t <= args.ttft_slo_ms for t in ttfts)
+        print(f"TTFT SLO {args.ttft_slo_ms} ms: {ok}/{len(ttfts)} met")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation.  Modality frontends are
+stubs per the assignment: whisper gets precomputed frame embeddings,
+qwen2-vl gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+N_PATCH_STUB = 256  # vision stub: one image worth of patch embeddings
+
+
+def batch_inputs(cfg: ModelConfig, B: int, S: int, *, kind: str) -> dict:
+    """Abstract batch for train (tokens+labels) / prefill (tokens) /
+    decode (single token)."""
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+        if cfg.rope_style == "mrope":
+            specs["positions"] = jax.ShapeDtypeStruct((B, 1, 3), i32)
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    if cfg.rope_style == "mrope":
+        specs["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+    if cfg.encoder_layers > 0:
+        specs["frame_embeds"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), dt)
+    if cfg.frontend == "vision_patches":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct((B, N_PATCH_STUB, cfg.d_model), dt)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    return batch_inputs(cfg, shape.global_batch, shape.seq_len, kind=shape.kind)
+
+
+def concrete_batch(cfg: ModelConfig, B: int, S: int, *, kind: str, seed: int = 0) -> dict:
+    """Small concrete batch for smoke tests / examples (mirrors input_specs)."""
+    rng = jax.random.PRNGKey(seed)
+    specs = batch_inputs(cfg, B, S, kind=kind)
+    out = {}
+    for k, s in specs.items():
+        rng, sub = jax.random.split(rng)
+        if s.dtype == jnp.int32:
+            if k == "positions":
+                base = jnp.arange(s.shape[1])[None, :, None] if s.ndim == 3 else None
+                out[k] = jnp.broadcast_to(base, s.shape).astype(jnp.int32) if base is not None \
+                    else jax.random.randint(sub, s.shape, 0, cfg.vocab_size)
+            else:
+                out[k] = jax.random.randint(sub, s.shape, 0, cfg.vocab_size)
+        else:
+            out[k] = (jax.random.normal(sub, s.shape, jnp.float32) * 0.02).astype(s.dtype)
+    return out

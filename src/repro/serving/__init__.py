@@ -1,0 +1,7 @@
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sp_planner import (
+    BatchPlan, SPChoice, attention_latency_us, plan_batch, plan_request,
+)
+
+__all__ = ["Request", "ServingEngine", "BatchPlan", "SPChoice",
+           "attention_latency_us", "plan_batch", "plan_request"]

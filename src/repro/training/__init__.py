@@ -1,0 +1,11 @@
+from repro.training.optimizer import adafactor, adamw, make_optimizer
+from repro.training.train_step import (
+    batch_pspecs, cross_entropy, make_loss_fn, make_train_step, opt_pspecs,
+    param_pspecs, state_pspecs, to_named,
+)
+
+__all__ = [
+    "adafactor", "adamw", "make_optimizer", "batch_pspecs", "cross_entropy",
+    "make_loss_fn", "make_train_step", "opt_pspecs", "param_pspecs",
+    "state_pspecs", "to_named",
+]

@@ -1,0 +1,122 @@
+"""Distributed checkpointing with resharding restore (fault tolerance).
+
+Checkpoints are step-scoped directories of flat-keyed ``.npz`` shards plus a
+JSON manifest (shapes, dtypes, step, data-pipeline state).  Restore accepts a
+*different* mesh/sharding than the save used — arrays are re-placed under the
+target NamedShardings (elastic rescale after node failure).  Saves are atomic
+(tmp dir + rename) and optionally asynchronous; a retention policy garbage
+collects old steps.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, jax.Array]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, *, keep: int = 3,
+                 async_save: bool = False):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state, *, extra: dict | None = None):
+        """Snapshot to host then write (async-safe: device buffers are
+        materialised before the writer thread starts)."""
+        flat = _flatten(state)
+        host = {}
+        for k, v in flat.items():
+            a = np.asarray(jax.device_get(v))
+            if a.dtype == jnp.bfloat16:   # npz has no native bf16: widen
+                a = a.astype(np.float32)
+            host[k] = a
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+            "extra": extra or {},
+        }
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, manifest), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, manifest)
+
+    def _write(self, step: int, host: dict, manifest: dict):
+        tmp = self.dir / f".tmp_step_{step:09d}"
+        final = self.dir / f"step_{step:09d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **{k: v for k, v in host.items()})
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic publish
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*"))
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target_state, *, step: int | None = None,
+                shardings=None) -> tuple[object, dict]:
+        """Restore into ``target_state``'s structure.  ``shardings`` (same
+        structure, NamedSharding leaves) re-places arrays on a possibly
+        different mesh — the elastic-rescale path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:09d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        arrays = np.load(d / "arrays.npz")
+        flat_target = _flatten(target_state)
+        flat_shard = _flatten(shardings) if shardings is not None else {}
+        leaves, treedef = jax.tree_util.tree_flatten(target_state)
+        keys = list(_flatten(target_state).keys())
+        out_leaves = []
+        for key, tgt in zip(keys, flat_target.values()):
+            a = arrays[key]
+            want = tuple(tgt.shape)
+            if tuple(a.shape) != want:
+                raise ValueError(f"shape mismatch for {key}: {a.shape} vs {want}")
+            arr = jnp.asarray(a)
+            if hasattr(tgt, "dtype"):
+                arr = arr.astype(tgt.dtype)   # restores bf16 from widened fp32
+            s = flat_shard.get(key)
+            out_leaves.append(jax.device_put(arr, s) if s is not None else arr)
+        return jax.tree_util.tree_unflatten(treedef, out_leaves), manifest["extra"]

@@ -1,0 +1,158 @@
+"""Optimizers in pure JAX (optax is not available offline).
+
+* ``adamw``      — AdamW with fp32 first/second moments (16 B/param states).
+* ``adafactor``  — factored second moments (sub-byte/param states); the shipped
+                   optimizer for deepseek-v3-671b, whose Adam states cannot fit
+                   a v5e-256 pod (see EXPERIMENTS.md memory ledger).
+
+Both support int8 gradient "compression" (quantise-dequantise transform that
+models the numerics of compressed DP all-reduce; the simulator prices the
+bytes reduction, see core/passes/data_parallel.py).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params) -> (new_params, new_state)
+
+
+# --------------------------------------------------------------------------
+# LR schedules
+# --------------------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup: int = 100, total: int = 10_000,
+                    final_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return lr
+
+
+# --------------------------------------------------------------------------
+# Gradient compression (int8 quant-dequant; models compressed DP all-reduce)
+# --------------------------------------------------------------------------
+
+def int8_compress_decompress(g: jax.Array) -> jax.Array:
+    if g.dtype == jnp.int32 or g.ndim == 0:
+        return g
+    absmax = jnp.max(jnp.abs(g.astype(jnp.float32)), keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return (q.astype(jnp.float32) * scale).astype(g.dtype)
+
+
+def maybe_compress(grads, mode: str):
+    if mode == "int8":
+        return jax.tree.map(int8_compress_decompress, grads)
+    return grads
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = treedef.unflatten([l[0] for l in leaves])
+        new_m = treedef.unflatten([l[1] for l in leaves])
+        new_v = treedef.unflatten([l[2] for l in leaves])
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment, update clipping)
+# --------------------------------------------------------------------------
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(lr_fn, eps1: float = 1e-30, eps2: float = 1e-3,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0) -> Optimizer:
+    """Factored state is kept as a flat list aligned with tree leaves (avoids
+    dict-in-dict structure ambiguity with parameter trees)."""
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": [st(p) for p in jax.tree.leaves(params)],
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        beta2 = 1.0 - step.astype(jnp.float32) ** -0.8
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps1
+            if _factored(g.shape):
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(-2)
+                denom = (vr / jnp.maximum(vr.mean(-1, keepdims=True), eps1))[..., None] * vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps1))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps1))
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            pf = p.astype(jnp.float32)
+            scale = jnp.maximum(jnp.sqrt(jnp.mean(jnp.square(pf))), eps2)
+            new_p = pf - lr * scale * u - lr * weight_decay * pf
+            return new_p.astype(p.dtype), new_s
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = jax.tree.leaves(params)
+        outs = [upd(g, s, p) for g, s, p in zip(g_leaves, state["f"], p_leaves)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        return new_p, {"f": [o[1] for o in outs], "step": step}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, peak_lr: float = 3e-4, **kw) -> Optimizer:
+    lr_fn = cosine_schedule(peak_lr)
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    raise ValueError(name)

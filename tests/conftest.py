@@ -1,0 +1,9 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device; only launch/dryrun.py fakes 512 devices.
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
