@@ -26,9 +26,15 @@ def run() -> list[dict]:
                   memory_limit=16e9)
     wall = time.time() - t0
     front = res.pareto()
+    pr = res.cache_stats.get("pricing", {"hits": 0, "misses": 0})
+    pr_rate = pr["hits"] / max(pr["hits"] + pr["misses"], 1)
     rows = [{"bench": "fig13_dse", "case": "exploration",
              "n_evaluated": len(res.evaluated), "n_pruned": len(res.pruned),
              "wall_s": round(wall, 1),
+             "configs_per_sec": round(res.configs_per_sec, 1),
+             "n_reuse_groups": res.n_groups,
+             "pricing_hit_rate": round(pr_rate, 3),
+             "cache_stats": res.cache_stats,
              "paper_claim": "completes within two minutes"}]
     for r in front[:8]:
         p = r.cand.par

@@ -2,6 +2,9 @@
 
 An engine prices a single operator: ``latency_us(node) -> float | None``
 (None = unsupported, the fused engine falls through to the next priority).
+The fused engine memoizes prices on a canonical operator signature — sweep
+candidates re-price the same (kind, shapes, dtype, comm) tuples thousands of
+times, and every registered engine is a pure function of those fields.
 """
 from __future__ import annotations
 
@@ -9,6 +12,7 @@ from typing import Protocol, runtime_checkable
 
 from repro.core.backend.hardware import HardwareSpec
 from repro.core.ir import OpNode
+from repro.core.simcache import CacheStats
 
 
 @runtime_checkable
@@ -21,31 +25,88 @@ class Engine(Protocol):
     def latency_us(self, node: OpNode) -> float | None: ...
 
 
+def node_signature(node: OpNode) -> tuple:
+    """Canonical pricing signature: every node field any engine consumes.
+
+    Analytical: kind/dtype/flops/bytes/comm + mm_dims + operand_bytes.
+    Profiling:  kind/dtype + mm_dims | attn_dims | out_shape (+ vocab).
+    Prediction: kind/dtype + dims + flops + total_bytes.
+    ``repeat`` and ``phase`` are deliberately excluded — engines price one
+    execution; the scheduler applies the repeat multiplier.
+    """
+    a = node.attrs
+    mm = a.get("mm_dims")
+    at = a.get("attn_dims")
+    return (node.kind, node.dtype, node.flops, node.bytes_in, node.bytes_out,
+            node.comm_bytes, node.comm_group, node.comm_size,
+            tuple(node.out_shape) if node.out_shape else (),
+            tuple(mm) if mm else None, tuple(at) if at else None,
+            a.get("operand_bytes"), a.get("vocab"))
+
+
 class FusedEngine:
     """Priority-fallback over a registry of engines (paper §3.3d).
 
     Each engine keeps its own supported-operator registry; the fused engine
     dynamically selects the highest-priority engine for every operator and
-    falls back when an engine declines (returns None)."""
+    falls back when an engine declines (returns None).  Prices are memoized
+    per :func:`node_signature` with hit/miss counters for the benchmarks."""
 
     name = "fused"
 
-    def __init__(self, engines):
+    def __init__(self, engines, *, cache: bool = True):
         self.engines = sorted(engines, key=lambda e: -e.priority)
+        self._cache: dict | None = {} if cache else None
+        self.stats = CacheStats()
+        self._version = self._state_version()
+
+    def _state_version(self) -> int:
+        """Combined version of mutable engine state (profiling DB contents,
+        prediction-model retrains).  A change invalidates the price memo —
+        engines are pure functions of (signature, state version)."""
+        return sum(int(getattr(e, "state_version", 0)) for e in self.engines)
 
     def supports(self, node: OpNode) -> bool:
         return any(e.supports(node) for e in self.engines)
 
-    def latency_us(self, node: OpNode) -> float | None:
+    def _price(self, node: OpNode) -> tuple[float | None, str]:
         for e in self.engines:
             if e.supports(node):
                 t = e.latency_us(node)
                 if t is not None:
-                    return t
-        return None
+                    return t, e.name
+        return None, "none"
+
+    def _priced(self, node: OpNode) -> tuple[float | None, str]:
+        if self._cache is None:
+            return self._price(node)
+        v = self._state_version()
+        if v != self._version:
+            self._cache.clear()
+            self._version = v
+        try:
+            sig = node_signature(node)
+            ent = self._cache.get(sig)
+        except TypeError:            # exotic attrs: price uncached
+            return self._price(node)
+        if ent is not None:
+            self.stats.hits += 1
+            return ent
+        self.stats.misses += 1
+        ent = self._price(node)
+        self._cache[sig] = ent
+        return ent
+
+    def latency_us(self, node: OpNode) -> float | None:
+        return self._priced(node)[0]
 
     def engine_for(self, node: OpNode) -> str:
-        for e in self.engines:
-            if e.supports(node) and e.latency_us(node) is not None:
-                return e.name
-        return "none"
+        return self._priced(node)[1]
+
+    def cache_clear(self) -> None:
+        if self._cache is not None:
+            self._cache.clear()
+        self.stats = CacheStats()
+
+    def cache_info(self) -> CacheStats:
+        return self.stats

@@ -156,8 +156,10 @@ class PredictionEngine:
         self.db = db or ProfileDB()
         self.models: dict[str, RandomForest] = {}
         self._trained = False
+        self.state_version = 0   # bumped per (re)train; invalidates price caches
 
     def train(self, *, exclude_keys: set[str] | None = None, min_samples: int = 8):
+        self.state_version += 1
         by_kind: dict[str, list[tuple[np.ndarray, float]]] = {}
         for key, entry in self.db.entries():
             if exclude_keys and key in exclude_keys:

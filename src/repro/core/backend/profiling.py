@@ -35,6 +35,7 @@ class ProfileDB:
     def __init__(self, path: Path | str = DB_PATH):
         self.path = Path(path)
         self.data: dict[str, dict] = {}
+        self.version = 0     # bumped on every put; price caches key on it
         if self.path.exists():
             try:
                 self.data = json.loads(self.path.read_text())
@@ -46,6 +47,7 @@ class ProfileDB:
         return e["us"] if e else None
 
     def put(self, key: str, us: float, meta: dict):
+        self.version += 1
         self.data[key] = {"us": us, **meta}
 
     def save(self):
@@ -168,6 +170,16 @@ class ProfilingEngine:
         self.hw = hw
         self.db = db or ProfileDB()
         self.measure_on_miss = measure_on_miss and hw.name == "xla_cpu"
+        self._self_puts = 0
+
+    @property
+    def state_version(self) -> int:
+        """Changes when *external* DB mutation could alter an already-given
+        answer (fused-engine price caches invalidate on it).  Own
+        measure-on-miss puts are excluded: the value cached for that
+        signature IS the measurement, so nothing previously answered
+        changes."""
+        return self.db.version - self._self_puts
 
     def supports(self, node: OpNode) -> bool:
         return node.kind in self.SUPPORTED
@@ -181,6 +193,7 @@ class ProfilingEngine:
             return None
         us = synthesize_and_measure(node)
         if us is not None:
+            self._self_puts += 1
             self.db.put(key, us, {"kind": node.kind,
                                   "dims": list(node.attrs.get("mm_dims")
                                                or node.attrs.get("attn_dims")

@@ -5,6 +5,13 @@ prunes known-inefficient subspaces *before* simulating (user-extensible
 rules), simulates the rest, and reports the Pareto frontier over
 (system throughput TPS/chip vs user-facing TPS/user) plus best-under-SLO
 queries — the paper's Fig. 13 workflow.
+
+Throughput is first-class: candidates are grouped by the sub-results they
+share (same tp/ep and per-shard batch ⇒ same traced, transformed and priced
+block graphs), so a sweep pays the expensive stages once per group and the
+simulator's :class:`~repro.core.simcache.SimCache` serves the rest.
+``ExplorationResult`` carries configs/sec and per-layer cache hit rates so
+benchmarks can track the sweep-throughput trajectory.
 """
 from __future__ import annotations
 
@@ -15,8 +22,9 @@ from dataclasses import dataclass, field
 from typing import Callable, Iterable
 
 from repro.configs.base import ModelConfig
+from repro.core.memory import COLLECTIVE_BUFFER_BYTES
 from repro.core.passes.base import ParallelConfig
-from repro.core.simulator import Report, Simulator
+from repro.core.simulator import Report, Simulator, shard_memory_floor
 
 
 @dataclass
@@ -28,6 +36,14 @@ class Candidate:
     def key(self) -> tuple:
         p = self.par
         return (p.tp, p.pp, p.dp, p.pods, p.microbatches, self.global_batch)
+
+    def B_local(self) -> int:
+        return max(self.global_batch // max(self.par.dp * self.par.pods, 1), 1)
+
+    def reuse_key(self) -> tuple:
+        """Candidates with equal reuse keys share priced block graphs (the
+        simulator's block-stage cache key, minus the sweep-constant parts)."""
+        return (self.par.shard_key(), self.B_local())
 
 
 @dataclass
@@ -70,8 +86,25 @@ def rule_pp_layers(cfg: ModelConfig, c: Candidate) -> str | None:
     return None
 
 
-def rule_memory_fit(hw_bytes: float):
+def rule_memory_fit(hw_bytes: float, *, mode: str = "decode",
+                    seq_len: int = 4096, cache_len: int = 0):
+    """Closed-form memory-infeasibility pruning (pre-simulation).
+
+    Estimates the per-device floor: sharded parameters + KV cache (decode)
+    + collective staging buffers.  Every term is a component the full memory
+    simulation also counts (before its >=1 fragmentation factor), so the
+    estimate is a lower bound — a candidate pruned here could never have
+    passed the post-simulation ``memory_limit`` filter, while feasible
+    candidates are never pruned early.  The post-filter remains as the
+    fallback for the activation/optimizer terms this estimate omits.
+    """
     def rule(cfg: ModelConfig, c: Candidate, report: Report | None = None) -> str | None:
+        param_dev, kv = shard_memory_floor(cfg, c.par, c.B_local(), mode,
+                                           cache_len or seq_len)
+        est = param_dev + kv + COLLECTIVE_BUFFER_BYTES
+        if est > hw_bytes:
+            return (f"memory-fit: params+KV >= {est / 1e9:.1f}GB "
+                    f"> limit {hw_bytes / 1e9:.1f}GB")
         return None
     return rule
 
@@ -86,6 +119,9 @@ class ExplorationResult:
     evaluated: list[EvalResult]
     pruned: list[EvalResult]
     wall_time_s: float
+    n_groups: int = 0                               # distinct reuse groups
+    configs_per_sec: float = 0.0
+    cache_stats: dict = field(default_factory=dict)  # per-layer hits/misses
 
     def pareto(self, x=lambda r: r.tps_per_user, y=lambda r: r.tps_per_chip
                ) -> list[EvalResult]:
@@ -110,6 +146,12 @@ class ExplorationResult:
         return max(ok, key=lambda r: r.tps_per_chip)
 
 
+def _stats_delta(after: dict, before: dict) -> dict:
+    return {layer: {k: after[layer][k] - before.get(layer, {}).get(k, 0)
+                    for k in ("hits", "misses")}
+            for layer in after}
+
+
 def explore(sim: Simulator, cfg: ModelConfig, *, mode: str = "decode",
             seq_len: int = 4096, chips: int = 256,
             tp_choices: Iterable[int] = (1, 2, 4, 8, 16),
@@ -119,11 +161,13 @@ def explore(sim: Simulator, cfg: ModelConfig, *, mode: str = "decode",
             rules: list[Callable] | None = None,
             memory_limit: float | None = None,
             max_evals: int = 10_000) -> ExplorationResult:
-    rules = DEFAULT_RULES if rules is None else rules
+    rules = list(DEFAULT_RULES if rules is None else rules)
+    if memory_limit is not None:
+        # cheap closed-form pre-filter; the post-simulation check stays below
+        rules.append(rule_memory_fit(memory_limit, mode=mode, seq_len=seq_len))
     t0 = time.time()
-    evaluated: list[EvalResult] = []
     pruned: list[EvalResult] = []
-    n = 0
+    cands: list[Candidate] = []
     for tp, pp, gb, m in itertools.product(tp_choices, pp_choices,
                                            batch_choices, micro_choices):
         if chips % (tp * pp):
@@ -136,11 +180,19 @@ def explore(sim: Simulator, cfg: ModelConfig, *, mode: str = "decode",
         if reason:
             pruned.append(EvalResult(cand, None, pruned=True, reason=reason))
             continue
-        n += 1
-        if n > max_evals:
-            break
-        rep = sim.simulate(cfg, mode=mode, global_batch=gb, seq_len=seq_len,
-                           par=par, remat="none" if mode != "train" else "block")
+        cands.append(cand)
+
+    # evaluate group-by-group so every candidate after the first in a group
+    # hits the simulator's block-stage cache while it is warm
+    cands.sort(key=lambda c: (c.reuse_key(), c.key()))
+    n_groups = len({c.reuse_key() for c in cands})
+    stats0 = sim.cache_stats()
+
+    evaluated: list[EvalResult] = []
+    for cand in cands[:max_evals]:
+        rep = sim.simulate(cfg, mode=mode, global_batch=cand.global_batch,
+                           seq_len=seq_len, par=cand.par,
+                           remat="none" if mode != "train" else "block")
         res = EvalResult(cand, rep)
         if memory_limit is not None and rep.memory and rep.memory.total > memory_limit:
             res.pruned = True
@@ -148,4 +200,8 @@ def explore(sim: Simulator, cfg: ModelConfig, *, mode: str = "decode",
             pruned.append(res)
             continue
         evaluated.append(res)
-    return ExplorationResult(evaluated, pruned, time.time() - t0)
+    wall = time.time() - t0
+    return ExplorationResult(
+        evaluated, pruned, wall, n_groups=n_groups,
+        configs_per_sec=(len(cands[:max_evals]) / wall) if wall > 0 else 0.0,
+        cache_stats=_stats_delta(sim.cache_stats(), stats0))

@@ -65,6 +65,7 @@ class Graph:
         self.name = name
         self.nodes: dict[str, OpNode] = {}
         self._ctr = 0
+        self._topo: list[OpNode] | None = None   # cached toposort order
 
     # ---- construction ----
     def add(self, node: OpNode) -> OpNode:
@@ -72,6 +73,7 @@ class Graph:
             self._ctr += 1
             node.name = f"{node.name}.{self._ctr}"
         self.nodes[node.name] = node
+        self._topo = None
         return node
 
     def op(self, kind: str, name: str | None = None, deps: Iterable[str] = (),
@@ -81,6 +83,7 @@ class Graph:
                                deps=list(deps), **kw))
 
     def remove(self, name: str):
+        self._topo = None
         node = self.nodes.pop(name)
         for other in self.nodes.values():
             other.deps = [node.deps[0] if d == name and node.deps else d
@@ -94,6 +97,8 @@ class Graph:
         return len(self.nodes)
 
     def toposort(self) -> list[OpNode]:
+        if self._topo is not None:
+            return self._topo
         order: list[OpNode] = []
         seen: set[str] = set()
         state: dict[str, int] = {}
@@ -121,6 +126,7 @@ class Graph:
         for n in self.nodes:
             if n not in seen:
                 visit(n)
+        self._topo = order
         return order
 
     def successors(self) -> dict[str, list[str]]:

@@ -49,6 +49,17 @@ class ModelGraphs:
         return out
 
 
+def ingest_key(cfg: ModelConfig, B_local: int, S: int, mode: str,
+               cache_len: int = 0) -> tuple:
+    """Memoization key for :func:`block_graphs`.
+
+    ``ModelConfig`` is a frozen dataclass of hashable fields, so the config
+    itself is the model fingerprint.  Two calls with equal keys trace
+    identical graphs; callers must clone before mutating (the simulator's
+    pass pipeline already does)."""
+    return (cfg, B_local, S, mode, cache_len)
+
+
 def _cycle_param_slice(cfg: ModelConfig, pos: int):
     """Abstract params of one layer at cycle position ``pos``."""
     pa = abstract_params(cfg)

@@ -77,6 +77,14 @@ def bandwidth_aware_comm(comm_intervals: list[Interval]) -> list[Interval]:
         t_finish = min(t + remaining[id(f)] / (rate1[id(f)] / n) for f in active)
         t_next = min(t_finish, pending[0].start) if pending else t_finish
         dt = t_next - t
+        if dt <= 0.0:
+            # numerical stall: remaining/rate underflowed against t, so no
+            # event advances the clock — finish the flow closest to done to
+            # guarantee forward progress
+            f = min(active, key=lambda f: remaining[id(f)] / rate1[id(f)])
+            finished[id(f)] = t
+            active.remove(f)
+            continue
         for f in list(active):
             remaining[id(f)] -= rate1[id(f)] / n * dt
             if remaining[id(f)] <= 1e-9:

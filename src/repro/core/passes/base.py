@@ -30,6 +30,19 @@ class ParallelConfig:
     def chips(self) -> int:
         return self.tp * self.dp * self.pp * self.pods * self.cp
 
+    def key(self) -> tuple:
+        """Hashable identity over every field (cache keys, dedup)."""
+        return (self.tp, self.dp, self.pp, self.ep, self.sp, self.pods,
+                self.cp, self.zero_stage, self.microbatches, self.pp_schedule)
+
+    def shard_key(self) -> tuple:
+        """The fields the graph-rewriting passes consume (TP/SP/EP/CP).
+
+        Replication axes (dp, pods, pp, microbatches, zero) only enter the
+        stack/schedule math, not per-block graphs — candidates that differ
+        only there share priced block graphs."""
+        return (self.tp, self.sp, self.ep, self.cp)
+
 
 @dataclass
 class PassContext:
@@ -45,6 +58,15 @@ class Pass(Protocol):
     def apply(self, g: Graph, ctx: PassContext) -> Graph: ...
 
 
+def pass_cache_key(p) -> tuple:
+    """Hashable identity of one pass instance.  Parameterized passes override
+    ``cache_key()``; stateless passes are identified by name."""
+    ck = getattr(p, "cache_key", None)
+    if ck is not None:
+        return ck()
+    return (getattr(p, "name", type(p).__name__),)
+
+
 class PassManager:
     def __init__(self, passes: list | None = None):
         self.passes = list(passes or [])
@@ -57,3 +79,9 @@ class PassManager:
         for p in self.passes:
             g = p.apply(g, ctx)
         return g
+
+    def signature(self) -> tuple:
+        """Pipeline identity for post-pass graph caching: two managers with
+        equal signatures rewrite a given graph identically (for equal
+        ``ParallelConfig.shard_key()``)."""
+        return tuple(pass_cache_key(p) for p in self.passes)

@@ -36,6 +36,9 @@ class FusionPass:
         self.rules = rules if rules is not None else list(DEFAULT_RULES)
         self.applied: list[str] = []
 
+    def cache_key(self) -> tuple:
+        return (self.name,) + tuple(r.name for r in self.rules)
+
     def apply(self, g: Graph, ctx=None) -> Graph:
         for rule in self.rules:
             g = self._apply_rule(g, rule)

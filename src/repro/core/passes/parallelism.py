@@ -135,6 +135,9 @@ class ExpertParallelPass:
     def __init__(self, num_experts: int):
         self.num_experts = num_experts
 
+    def cache_key(self) -> tuple:
+        return (self.name, self.num_experts)
+
     def apply(self, g: Graph, ctx) -> Graph:
         ep = ctx.parallel.ep
         if ep <= 1 or self.num_experts % ep != 0:
@@ -185,6 +188,9 @@ class ContextParallelPass:
 
     def __init__(self, cp: int | None = None):
         self.cp = cp   # explicit size (e.g. reuse of the tp axis); else ctx.cp
+
+    def cache_key(self) -> tuple:
+        return (self.name, self.cp)
 
     def apply(self, g: Graph, ctx) -> Graph:
         cp = self.cp or ctx.parallel.cp

@@ -18,6 +18,9 @@ class QuantizePass:
         self.dtype = dtype
         self.matmul_only = matmul_only
 
+    def cache_key(self) -> tuple:
+        return (self.name, self.dtype, self.matmul_only)
+
     def apply(self, g: Graph, ctx=None) -> Graph:
         new_b = _BYTES[self.dtype]
         for n in g:

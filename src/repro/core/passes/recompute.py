@@ -16,6 +16,9 @@ class RecomputePass:
     def __init__(self, policy: str = "block"):
         self.policy = policy  # none | block | dots
 
+    def cache_key(self) -> tuple:
+        return (self.name, self.policy)
+
     def apply(self, g: Graph, ctx=None) -> Graph:
         if self.policy == "none":
             return g

@@ -70,8 +70,7 @@ def schedule(graph: Graph, engine, *, expand_repeats: bool = False,
         lat = engine.latency_us(node)
         if lat is None:
             lat = 0.0
-        stream = node.stream if (node.overlappable or node.stream != "compute") \
-            else "compute"
+        stream = node.stream
         dep_ready = max((done.get(d, 0.0) for d in node.deps), default=0.0)
         reps = node.repeat if expand_repeats and node.repeat <= max_expand else 1
         dur_total = lat * (node.repeat if reps == 1 else 1)
@@ -90,6 +89,80 @@ def schedule(graph: Graph, engine, *, expand_repeats: bool = False,
         stream_free[stream] = t
         done[node.name] = t
     return tl
+
+
+def schedule_times(graph: Graph, engine, hw=None) -> tuple[float, dict[str, float]]:
+    """Interval-free fast path: ``(total_time, by_kind)`` via running scalars.
+
+    Performs the same list-scheduling arithmetic as :func:`schedule` followed
+    by the ratio overlap model (core/overlap.py) when ``hw`` is given, but
+    keeps only flat per-op arrays — no ``Interval``/``Timeline`` allocation.
+    Accumulation order matches the interval path exactly, so the results are
+    bit-identical to ``apply_ratio_overlap(schedule(g, engine), hw)``.
+    Used by ``Simulator._time`` whenever ``keep_timelines=False``; traces and
+    the bandwidth-aware overlap model keep the interval-building path.
+    """
+    starts: list[float] = []
+    ends: list[float] = []
+    kinds: list[str] = []
+    comp_idx: list[int] = []
+    comm_idx: list[int] = []
+    comm_stream: list[str] = []
+    stream_free: dict[str, float] = {}
+    done: dict[str, float] = {}
+
+    for node in graph.toposort():
+        lat = engine.latency_us(node)
+        if lat is None:
+            lat = 0.0
+        stream = node.stream
+        dep_ready = max((done.get(d, 0.0) for d in node.deps), default=0.0)
+        t = max(stream_free.get(stream, 0.0), dep_ready)
+        end = t + lat * node.repeat
+        i = len(starts)
+        starts.append(t)
+        ends.append(end)
+        kinds.append(node.kind)
+        if stream == "compute":
+            comp_idx.append(i)
+        else:
+            comm_idx.append(i)
+            comm_stream.append(stream)
+        stream_free[stream] = end
+        done[node.name] = end
+
+    extra: dict[int, float] = {}
+    if hw is not None and comm_idx:
+        sc = hw.overlap_slowdown_compute - 1.0
+        sm = hw.overlap_slowdown_comm - 1.0
+        smm = hw.overlap_slowdown_comm_comm - 1.0
+        for c in comm_idx:
+            cs, ce = starts[c], ends[c]
+            for k in comp_idx:
+                ov = min(ce, ends[k]) - max(cs, starts[k])
+                if ov <= 0:
+                    continue
+                extra[k] = extra.get(k, 0.0) + ov * sc
+                extra[c] = extra.get(c, 0.0) + ov * sm
+        for a, c1 in enumerate(comm_idx):
+            for b in range(a + 1, len(comm_idx)):
+                if comm_stream[a] == comm_stream[b]:
+                    continue
+                c2 = comm_idx[b]
+                ov = min(ends[c1], ends[c2]) - max(starts[c1], starts[c2])
+                if ov <= 0:
+                    continue
+                extra[c1] = extra.get(c1, 0.0) + ov * smm
+                extra[c2] = extra.get(c2, 0.0) + ov * smm
+
+    total = 0.0
+    by_kind: dict[str, float] = {}
+    for i in range(len(starts)):
+        end = ends[i] + extra.get(i, 0.0)
+        if end > total:
+            total = end
+        by_kind[kinds[i]] = by_kind.get(kinds[i], 0.0) + (end - starts[i])
+    return total, by_kind
 
 
 def graph_time_us(graph: Graph, engine) -> float:

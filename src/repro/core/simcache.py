@@ -1,0 +1,88 @@
+"""Layered memoization for the simulation stack.
+
+Design-space sweeps evaluate thousands of near-identical candidates; most of
+the per-candidate cost (JAX tracing in ``block_graphs``, pass pipelines,
+per-node engine pricing) repeats verbatim whenever two candidates share the
+relevant key.  ``SimCache`` holds the three sweep-level buckets:
+
+* ``ingest``       — ``block_graphs`` results, keyed on
+                     (model config, B_local, S, mode, cache_len)
+* ``passes``       — post-``PassManager`` graphs, keyed on
+                     (ingest key, block kind, fwd/joint, pipeline signature,
+                     parallel signature)
+* ``block_times``  — the whole priced block stage (t_fwd / t_bwd / kind_us
+                     plus the transformed first-block graphs the memory
+                     analyzer needs), keyed on the union of the above
+
+Operator-pricing memoization lives on ``FusedEngine`` (see
+``backend/engine.py``) but reports through the same ``CacheStats`` type so
+benchmarks can track hit rates uniformly.  All cached values are treated as
+immutable by their consumers; correctness bar: bit-identical ``Report``s with
+caching on vs off (see tests/test_perf_cache.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.total if self.total else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": round(self.hit_rate, 4)}
+
+
+class SimCache:
+    """Sweep-scoped cache of expensive simulation sub-results.
+
+    ``enabled=False`` turns every ``get`` into a pass-through build (the cold
+    path), which keeps cached and uncached runs on the same code path — the
+    property the bit-identical tests rely on.
+    """
+
+    BUCKETS = ("ingest", "passes", "block_times")
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._data: dict[str, dict] = {b: {} for b in self.BUCKETS}
+        self.stats: dict[str, CacheStats] = {b: CacheStats() for b in self.BUCKETS}
+
+    def get(self, bucket: str, key: Any, build: Callable[[], Any]) -> Any:
+        if not self.enabled:
+            return build()
+        d = self._data[bucket]
+        st = self.stats[bucket]
+        try:
+            hit = key in d
+        except TypeError:           # unhashable key component: skip caching
+            return build()
+        if hit:
+            st.hits += 1
+            return d[key]
+        st.misses += 1
+        v = build()
+        d[key] = v
+        return v
+
+    def clear(self) -> None:
+        for d in self._data.values():
+            d.clear()
+        self.stats = {b: CacheStats() for b in self.BUCKETS}
+
+    def sizes(self) -> dict[str, int]:
+        return {b: len(d) for b, d in self._data.items()}
+
+    def stats_dict(self) -> dict[str, dict]:
+        return {b: st.as_dict() for b, st in self.stats.items()}

@@ -21,9 +21,10 @@ from repro.core.backend.prediction import PredictionEngine
 from repro.core.backend.profiling import ProfileDB, ProfilingEngine
 from repro.core.ir import Graph
 from repro.core.memory import MemoryReport, simulate_memory
-from repro.core.model_ingest import ModelGraphs, block_graphs
+from repro.core.model_ingest import ModelGraphs, block_graphs, ingest_key
 from repro.core.overlap import apply_bandwidth_aware, apply_ratio_overlap
 from repro.core.passes.base import ParallelConfig, PassContext, PassManager
+from repro.core.simcache import SimCache
 from repro.core.passes.data_parallel import optimizer_step_cost
 from repro.core.passes.fusion import FusionPass
 from repro.core.passes.parallelism import (
@@ -33,7 +34,7 @@ from repro.core.passes.parallelism import (
 from repro.core.passes.pipeline import PPSchedule, make_schedule
 from repro.core.passes.quantize import QuantizePass
 from repro.core.passes.recompute import RecomputePass
-from repro.core.scheduler import Timeline, schedule
+from repro.core.scheduler import Timeline, schedule, schedule_times
 from repro.models.kvcache import cache_bytes
 from repro.models.params import count_params
 
@@ -65,13 +66,46 @@ class Report:
         return self.step_time_us / 1e3 if self.mode == "prefill" else float("nan")
 
 
+def shard_memory_floor(cfg: ModelConfig, par: ParallelConfig, B_local: int,
+                       mode: str, cache_len: int) -> tuple[float, float]:
+    """(per-device parameter bytes, per-device KV-cache bytes) after sharding.
+
+    Single source of truth shared by ``simulate()``'s memory report and the
+    explorer's ``rule_memory_fit`` pre-filter — the pre-filter's lower-bound
+    guarantee only holds while both sides use the same formulas.
+    """
+    param_dev = 2 * count_params(cfg) / max(par.tp * par.pp, 1)
+    if par.zero_stage >= 3:
+        param_dev /= max(par.dp * par.pods, 1)
+    # KV cache shards over the model axis (heads when divisible, else the
+    # KV sequence — see models/kvcache.py)
+    kvb = cache_bytes(cfg, B_local, cache_len) / max(par.tp, 1) \
+        if mode == "decode" else 0.0
+    return param_dev, kvb
+
+
+@dataclass
+class _BlockStage:
+    """Priced per-block sub-results shared by sweep candidates with equal
+    (model, B_local, S, mode, cache_len, shard_key, pipeline) keys."""
+    graphs: ModelGraphs
+    t_fwd: dict
+    t_bwd: dict
+    kind_us: dict
+    first_fwd: Graph                 # post-pass first decoder block (memory)
+    first_joint: Graph | None
+    timelines: dict
+
+
 class Simulator:
     def __init__(self, hw: str | HardwareSpec = "tpu_v5e",
                  engine: str = "analytical", db: ProfileDB | None = None,
-                 *, overlap: str = "ratio", measure_on_miss: bool = False):
+                 *, overlap: str = "ratio", measure_on_miss: bool = False,
+                 cache: bool = True):
         self.hw = HARDWARE[hw] if isinstance(hw, str) else hw
         self.db = db or ProfileDB()
         self.overlap = overlap
+        self.cache = SimCache(enabled=cache)
         engines = []
         if engine in ("fused", "profiling"):
             engines.append(ProfilingEngine(self.hw, self.db,
@@ -85,7 +119,17 @@ class Simulator:
             engines = [engines[0], engines[-1]]
         elif engine == "prediction":
             engines = [e for e in engines if e.name in ("prediction", "analytical")]
-        self.engine = FusedEngine(engines)
+        self.engine = FusedEngine(engines, cache=cache)
+
+    def cache_stats(self) -> dict:
+        """Hit/miss counters for every cache layer (benchmark telemetry)."""
+        out = self.cache.stats_dict()
+        out["pricing"] = self.engine.stats.as_dict()
+        return out
+
+    def cache_clear(self) -> None:
+        self.cache.clear()
+        self.engine.cache_clear()
 
     # ------------------------------------------------------------------
     def _passes(self, cfg: ModelConfig, par: ParallelConfig, *,
@@ -116,6 +160,78 @@ class Simulator:
         return tl.total_time, tl
 
     # ------------------------------------------------------------------
+    def _block_stage(self, cfg: ModelConfig, mode: str, B_local: int, S: int,
+                     cache_len: int, par: ParallelConfig, *, fusion: bool,
+                     quantize: str | None, remat: str,
+                     keep_timelines: bool) -> _BlockStage:
+        """Trace, transform and price all block graphs — the dominant cost of
+        one ``simulate`` call, memoized across candidates that share shapes.
+
+        Three cache layers compose: ``ingest`` (traced graphs), ``passes``
+        (post-``PassManager`` graphs), ``block_times`` (the whole priced
+        stage).  ``keep_timelines=True`` bypasses the ``block_times`` layer
+        (timelines are per-call artifacts) but still reuses the lower two.
+        """
+        train = mode == "train"
+        # fast path: totals via running scalars, no Interval allocation;
+        # bandwidth-aware overlap needs real intervals, traces need timelines
+        use_fast = not keep_timelines and self.overlap != "bandwidth"
+        ikey = ingest_key(cfg, B_local, S, mode, cache_len)
+        pm = self._passes(cfg, par, fusion=fusion, quantize=quantize,
+                          remat=remat, train=train)
+        pm_sig = pm.signature()
+        shard = par.shard_key()
+
+        def build() -> _BlockStage:
+            mg = self.cache.get("ingest", ikey, lambda: block_graphs(
+                cfg, B_local, S, mode, cache_len=cache_len))
+            ctx = PassContext(parallel=par, model=cfg)
+
+            def passed(g: Graph, kind: str, which: str) -> Graph:
+                return self.cache.get(
+                    "passes", (ikey, kind, which, pm_sig, shard),
+                    lambda: pm.run(g.clone(), ctx))
+
+            t_fwd: dict[str, float] = {}
+            t_bwd: dict[str, float] = {}
+            kind_us: dict[str, float] = {}
+            timelines: dict[str, Timeline] = {}
+            first_kind = mg.blocks[0].kind
+            first_fwd = first_joint = None
+            for bg in mg.all_blocks():
+                fwd = passed(bg.fwd, bg.kind, "fwd")
+                if use_fast:
+                    tf, bk = schedule_times(fwd, self.engine, self.hw)
+                else:
+                    tf, tlf = self._time(fwd)
+                    bk = tlf.by_kind()
+                    if keep_timelines:
+                        timelines[bg.kind] = tlf
+                t_fwd[bg.kind] = tf
+                for k, v in bk.items():
+                    kind_us[k] = kind_us.get(k, 0.0) + v * bg.repeat
+                if bg.kind == first_kind:
+                    first_fwd = fwd
+                if train and bg.joint is not None:
+                    joint = passed(bg.joint, bg.kind, "joint")
+                    tj = schedule_times(joint, self.engine, self.hw)[0] \
+                        if use_fast else self._time(joint)[0]
+                    t_bwd[bg.kind] = max(tj - tf, tf)  # bwd >= fwd in practice
+                    if bg.kind == first_kind:
+                        first_joint = joint
+                else:
+                    t_bwd[bg.kind] = 0.0
+            return _BlockStage(mg, t_fwd, t_bwd, kind_us,
+                               first_fwd, first_joint, timelines)
+
+        if keep_timelines:
+            return build()
+        # engine state version: profiling-DB/prediction-model mutation must
+        # not serve stale priced stages (matches the FusedEngine price memo)
+        skey = (ikey, pm_sig, shard, self.engine._state_version())
+        return self.cache.get("block_times", skey, build)
+
+    # ------------------------------------------------------------------
     def simulate(self, cfg: ModelConfig, *, mode: str = "train",
                  global_batch: int = 8, seq_len: int = 2048,
                  par: ParallelConfig | None = None, remat: str = "block",
@@ -123,39 +239,19 @@ class Simulator:
                  quantize: str | None = None, cache_len: int = 0,
                  keep_timelines: bool = False) -> Report:
         par = par or ParallelConfig()
-        if par.cp == 1 and cfg.num_kv_heads % max(par.tp, 1) != 0:
-            par.cp = 1  # cp shares the tp axis; chips unchanged
         dp_total = max(par.dp * par.pods, 1)
         B_local = max(global_batch // dp_total, 1)
-        S = seq_len if mode != "decode" else 1
         train = mode == "train"
 
-        mg = block_graphs(cfg, B_local, seq_len if mode != "decode" else 1,
-                          mode, cache_len=cache_len or seq_len)
-        ctx = PassContext(parallel=par, model=cfg)
-        pm = self._passes(cfg, par, fusion=fusion, quantize=quantize,
-                          remat=remat, train=train)
-
-        t_fwd = {}
-        t_bwd = {}
-        kind_us: dict[str, float] = {}
-        timelines = {}
-        for bg in mg.all_blocks():
-            # set cp on the shared tp axis when heads are unshardable
-            eff_par = par
-            fwd = pm.run(bg.fwd.clone(), ctx)
-            tf, tlf = self._time(fwd)
-            t_fwd[bg.kind] = tf
-            for k, v in tlf.by_kind().items():
-                kind_us[k] = kind_us.get(k, 0.0) + v * bg.repeat
-            if keep_timelines:
-                timelines[bg.kind] = tlf
-            if train and bg.joint is not None:
-                joint = pm.run(bg.joint.clone(), ctx)
-                tj, _ = self._time(joint)
-                t_bwd[bg.kind] = max(tj - tf, tf)  # bwd >= fwd in practice
-            else:
-                t_bwd[bg.kind] = 0.0
+        stage = self._block_stage(
+            cfg, mode, B_local, seq_len if mode != "decode" else 1,
+            cache_len or seq_len, par, fusion=fusion, quantize=quantize,
+            remat=remat, keep_timelines=keep_timelines)
+        mg = stage.graphs
+        t_fwd = stage.t_fwd
+        t_bwd = stage.t_bwd
+        kind_us = dict(stage.kind_us)   # copy: stage may be cache-shared
+        timelines = dict(stage.timelines)
 
         # ---- stack totals ----
         dec_blocks = [b for b in mg.blocks]
@@ -221,25 +317,18 @@ class Simulator:
         mfu = model_flops / (chips * peak * total / 1e6) if total else 0.0
 
         # ---- memory ----
-        first = dec_blocks[0]
-        param_dev = 2 * count_params(cfg) / max(par.tp * pp, 1)
-        if cfg.num_experts and par.ep > 1:
-            pass  # expert shard already inside tp*pp approximation
-        if par.zero_stage >= 3:
-            param_dev /= dp_total
-        # KV cache shards over the model axis (heads when divisible, else the
-        # KV sequence — see models/kvcache.py)
-        kvb = cache_bytes(cfg, B_local, cache_len or seq_len) / max(par.tp, 1) \
-            if mode == "decode" else 0.0
+        # expert shard already inside the tp*pp approximation for MoE
+        param_dev, kvb = shard_memory_floor(cfg, par, B_local, mode,
+                                            cache_len or seq_len)
         mem = simulate_memory(
-            pm.run(first.fwd.clone(), ctx), n_layers=total_layers // pp,
+            stage.first_fwd, n_layers=total_layers // pp,
             param_bytes=param_dev,
             boundary_bytes=B_local * (seq_len if mode != "decode" else 1)
             * cfg.d_model * 2 / max(par.sp, 1),
             mode="train" if train else mode, optimizer=optimizer,
             zero_stage=par.zero_stage, dp=dp_total, tp=par.tp, remat=remat,
             kv_cache_bytes=kvb,
-            block_joint=pm.run(first.joint.clone(), ctx) if train and first.joint else None)
+            block_joint=stage.first_joint if train else None)
 
         return Report(
             mode=mode, step_time_us=total, chips=chips,
@@ -249,6 +338,6 @@ class Simulator:
             mfu=mfu, model_flops=model_flops,
             breakdown_us=breakdown, kind_us=kind_us, memory=mem, pp=sched,
             block_timelines=timelines,
-            detail={"t_fwd": t_fwd, "t_bwd": t_bwd, "B_local": B_local,
-                    "par": par},
+            detail={"t_fwd": dict(t_fwd), "t_bwd": dict(t_bwd),
+                    "B_local": B_local, "par": par},
         )

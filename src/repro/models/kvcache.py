@@ -9,6 +9,7 @@ KV sharding policy (divisibility-aware, see DESIGN.md):
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 import jax
@@ -93,7 +94,11 @@ def zero_cache(cfg: ModelConfig, batch: int, cache_len: int):
     return cache
 
 
+@functools.lru_cache(maxsize=1024)
 def cache_bytes(cfg: ModelConfig, batch: int, cache_len: int) -> int:
+    """Total cache bytes; pure in (cfg, batch, cache_len) — the mesh-dependent
+    sharding policy only picks logical axes, never shapes — so memoized for
+    sweeps that query it per candidate."""
     total = [0]
 
     def c(s, l, d):

@@ -12,6 +12,7 @@ so the model can `lax.scan` over depth; a non-divisible remainder lives under
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Callable
 
@@ -351,9 +352,12 @@ def init_params(cfg: ModelConfig, rng: jax.Array, dtype=None):
     return tree
 
 
+@functools.lru_cache(maxsize=512)
 def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
     """Total parameter count; ``active_only`` counts top-k routed experts only
-    (MoE active params for MODEL_FLOPS = 6 * N_active * D)."""
+    (MoE active params for MODEL_FLOPS = 6 * N_active * D).  Pure in the
+    frozen config, so memoized — the simulator calls it on every report and
+    sweeps call it per candidate."""
     total = [0]
 
     def c(path, shape, logical, fan_in):
