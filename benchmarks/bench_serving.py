@@ -1,0 +1,71 @@
+"""Request-level serving simulation (§5.3-style deployment what-ifs).
+
+Replays a 600-request Poisson trace for qwen2.5-32b decode on a v5e tp=8
+replica through every batching policy.  The headline numbers are the
+simulation *speed* (simulated requests/sec — the whole point of pricing
+engine steps with the simulator instead of running a cluster) and the
+step-oracle cache hit rate; the per-policy TTFT/TPOT/goodput rows are the
+deployment comparison a real operator would read.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.core import ParallelConfig, Simulator
+from repro.serving.sim import (
+    SLO, ChunkedPrefill, ContinuousBatching, DisaggregatedPD, LengthDist,
+    ServingSimulator, StaticBatching, synthesize,
+)
+
+
+def run() -> list[dict]:
+    cfg = get_config("qwen2.5-32b")
+    sim = Simulator("tpu_v5e", engine="analytical")
+    par = ParallelConfig(tp=8)
+    # rate tuned to ~0.85 utilization of the tp=8 replica (~3.3k tok/s at
+    # batch 32): loaded enough that policies separate, not collapsed
+    wl = synthesize(
+        600, arrival="poisson", rate_rps=4.0,
+        prompt=LengthDist("lognormal", median=512.0, sigma=0.6, cap=3072),
+        output=LengthDist("lognormal", median=96.0, sigma=0.5, cap=256),
+        seed=7)
+    slo = SLO(ttft_s=2.0, tpot_ms=60.0)
+    policies = [
+        ("continuous", ContinuousBatching(32)),
+        ("chunked_prefill", ChunkedPrefill(32, token_budget=512)),
+        ("static", StaticBatching(32)),
+        ("disaggregated", DisaggregatedPD(prefill_batch=4, decode_batch=32,
+                                          transfer_s=0.002)),
+    ]
+    rows = []
+    total_wall = 0.0
+    for name, pol in policies:
+        t0 = time.time()
+        rep = ServingSimulator(sim, cfg, par=par, policy=pol).run(wl, slo=slo)
+        wall = time.time() - t0
+        total_wall += wall
+        s = rep.summary()
+        rows.append({
+            "bench": "serving_sim", "case": name,
+            "n_requests": wl.n_requests,
+            "wall_s": round(wall, 2),
+            "sim_requests_per_sec": round(wl.n_requests / max(wall, 1e-9), 1),
+            "engine_steps": s["n_steps"],
+            "oracle_hit_rate": s["oracle_stats"].get("hit_rate", 0.0),
+            "ttft_p50_s": s["ttft_p50_s"], "ttft_p99_s": s["ttft_p99_s"],
+            "tpot_p50_ms": s["tpot_p50_ms"], "tpot_p99_ms": s["tpot_p99_ms"],
+            "tokens_per_s": s["tokens_per_s"],
+            "slo_attainment": s["slo_attainment"],
+            "goodput_rps": s["goodput_rps"],
+        })
+    st = sim.cache_stats()
+    rows.append({
+        "bench": "serving_sim", "case": "summary",
+        "total_wall_s": round(total_wall, 2),
+        "serving_cache": st["serving"],
+        "pricing_cache_hit_rate": st["pricing"]["hit_rate"],
+        "paper_claim": "request-level what-ifs at simulation speed "
+                       "(600-request trace per policy in seconds, not hours)",
+    })
+    return rows

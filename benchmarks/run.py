@@ -23,6 +23,7 @@ BENCHES = [
     ("fig13_dse", "benchmarks.bench_explore"),
     ("sec51_dynamic_sp", "benchmarks.bench_dynamic_sp"),
     ("fig1_sim_cost", "benchmarks.bench_sim_speed"),
+    ("sec53_serving", "benchmarks.bench_serving"),
 ]
 
 

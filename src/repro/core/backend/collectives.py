@@ -12,6 +12,7 @@ import math
 from dataclasses import dataclass
 
 from repro.core.backend.hardware import HardwareSpec, LinkDomain
+from repro.core.simcache import CacheStats
 
 
 def _ring_steps(kind: str, n: int) -> tuple[float, float]:
@@ -61,13 +62,54 @@ class GroupSpec:
     inter_size: int = 1     # pods spanned (DCN)
 
 
+# Memo for hierarchical collective times.  The p2p/DP-sync terms in
+# ``Simulator.simulate`` recompute the same handful of (kind, payload, group)
+# tuples for every sweep candidate; the result is a pure function of its
+# arguments, so a flat dict suffices.  The key carries the ``LinkDomain``
+# field values themselves (frozen, hashable) rather than the HardwareSpec
+# identity — a different spec, or a recalibrated link, hashes to a different
+# key, which gives the same staleness guarantee the pricing cache gets from
+# its engine state version, without any explicit versioning.
+_MEMO: dict[tuple, float] = {}
+_MEMO_MAX = 200_000          # runaway-sweep backstop, not a tuning knob
+_MEMO_STATS = CacheStats()
+
+
+def collective_memo_stats() -> CacheStats:
+    return _MEMO_STATS
+
+
+def collective_memo_clear() -> None:
+    _MEMO.clear()
+    _MEMO_STATS.hits = _MEMO_STATS.misses = 0
+
+
 def hierarchical_collective_time_us(kind: str, payload_bytes: float,
                                     group: GroupSpec, hw: HardwareSpec,
                                     *, algorithm: str = "ring",
                                     congestion: float = 1.0) -> float:
     """Cross-pod collectives decompose hierarchically:
     intra-pod reduce-scatter -> inter-pod stage on the shard -> intra-pod
-    all-gather (standard hierarchical all-reduce)."""
+    all-gather (standard hierarchical all-reduce).  Memoized (module level,
+    shared across simulators): see ``_MEMO`` above."""
+    key = (kind, payload_bytes, group.intra_size, group.inter_size,
+           hw.intra, hw.inter, algorithm, congestion)
+    t = _MEMO.get(key)
+    if t is not None:
+        _MEMO_STATS.hits += 1
+        return t
+    _MEMO_STATS.misses += 1
+    t = _hierarchical_uncached(kind, payload_bytes, group, hw,
+                               algorithm=algorithm, congestion=congestion)
+    if len(_MEMO) >= _MEMO_MAX:
+        _MEMO.clear()
+    _MEMO[key] = t
+    return t
+
+
+def _hierarchical_uncached(kind: str, payload_bytes: float, group: GroupSpec,
+                           hw: HardwareSpec, *, algorithm: str = "ring",
+                           congestion: float = 1.0) -> float:
     ni, ne = group.intra_size, group.inter_size
     if ne <= 1:
         return collective_time_us(kind, payload_bytes, ni, hw.intra,

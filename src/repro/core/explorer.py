@@ -52,6 +52,10 @@ class EvalResult:
     report: Report
     pruned: bool = False
     reason: str = ""
+    # request-level result when explore(objective="goodput") ran a serving
+    # scenario for this candidate (per-replica workload share; see
+    # repro.serving.sim.ServingScenario)
+    serving: object | None = None
 
     @property
     def tps_per_chip(self) -> float:
@@ -61,6 +65,19 @@ class EvalResult:
     def tps_per_user(self) -> float:
         # decode: tokens per second seen by one request
         return 1e6 / self.report.step_time_us if self.report.mode == "decode" else 0.0
+
+    @property
+    def goodput_rps(self) -> float:
+        """System-level SLO-attainment goodput: the per-replica serving
+        result scaled by the candidate's replica count."""
+        if self.serving is None:
+            return 0.0
+        replicas = max(self.cand.par.dp * self.cand.par.pods, 1)
+        return self.serving.goodput_rps * replicas
+
+    @property
+    def slo_attainment(self) -> float:
+        return self.serving.slo_attainment if self.serving is not None else 0.0
 
 
 # -------------------------- pruning rules ---------------------------------
@@ -122,6 +139,7 @@ class ExplorationResult:
     n_groups: int = 0                               # distinct reuse groups
     configs_per_sec: float = 0.0
     cache_stats: dict = field(default_factory=dict)  # per-layer hits/misses
+    objective: str = "step_time"
 
     def pareto(self, x=lambda r: r.tps_per_user, y=lambda r: r.tps_per_chip
                ) -> list[EvalResult]:
@@ -145,6 +163,30 @@ class ExplorationResult:
             return None
         return max(ok, key=lambda r: r.tps_per_chip)
 
+    def ranked(self, objective: str | None = None) -> list[EvalResult]:
+        """Candidates best-first under an objective.
+
+        ``step_time`` ranks by steady-state per-step latency (the pre-PR-3
+        behaviour); ``goodput`` ranks by system-level SLO-attainment
+        throughput from the request-level serving simulation and requires
+        ``explore(..., objective="goodput")``.  The two orders genuinely
+        differ under load: small batches win on step time while starving
+        admission capacity — see docs/serving.md for a documented scenario.
+        """
+        objective = objective or self.objective
+        if objective == "goodput":
+            if any(r.serving is None for r in self.evaluated):
+                raise ValueError(
+                    "goodput ranking needs explore(objective='goodput')")
+            return sorted(self.evaluated,
+                          key=lambda r: (-r.goodput_rps,
+                                         r.report.step_time_us))
+        if objective == "step_time":
+            return sorted(self.evaluated,
+                          key=lambda r: (r.report.step_time_us,
+                                         -r.tps_per_chip))
+        raise ValueError(f"unknown objective {objective!r}")
+
 
 def _stats_delta(after: dict, before: dict) -> dict:
     return {layer: {k: after[layer][k] - before.get(layer, {}).get(k, 0)
@@ -160,7 +202,19 @@ def explore(sim: Simulator, cfg: ModelConfig, *, mode: str = "decode",
             micro_choices: Iterable[int] = (1,),
             rules: list[Callable] | None = None,
             memory_limit: float | None = None,
-            max_evals: int = 10_000) -> ExplorationResult:
+            max_evals: int = 10_000, objective: str = "step_time",
+            scenario=None) -> ExplorationResult:
+    """Enumerate, prune, simulate and rank candidate configurations.
+
+    ``objective="step_time"`` (default) keeps the classic behaviour: every
+    candidate gets one steady-state ``simulate`` call.  ``"goodput"``
+    additionally replays a request-level serving scenario
+    (:class:`repro.serving.sim.ServingScenario`, default workload if
+    ``scenario`` is None) on every surviving candidate and ranks by system
+    SLO-attainment goodput via :meth:`ExplorationResult.ranked`.
+    """
+    if objective not in ("step_time", "goodput"):
+        raise ValueError(f"unknown objective {objective!r}")
     rules = list(DEFAULT_RULES if rules is None else rules)
     if memory_limit is not None:
         # cheap closed-form pre-filter; the post-simulation check stays below
@@ -200,8 +254,18 @@ def explore(sim: Simulator, cfg: ModelConfig, *, mode: str = "decode",
             pruned.append(res)
             continue
         evaluated.append(res)
+
+    if objective == "goodput":
+        # deferred import: repro.serving pulls the real-model serving stack,
+        # which the step-time-only path never needs
+        from repro.serving.sim import ServingScenario
+        scenario = scenario or ServingScenario.default()
+        for res in evaluated:
+            res.serving = scenario.evaluate(sim, cfg, res.cand)
+
     wall = time.time() - t0
     return ExplorationResult(
         evaluated, pruned, wall, n_groups=n_groups,
         configs_per_sec=(len(cands[:max_evals]) / wall) if wall > 0 else 0.0,
-        cache_stats=_stats_delta(sim.cache_stats(), stats0))
+        cache_stats=_stats_delta(sim.cache_stats(), stats0),
+        objective=objective)

@@ -13,6 +13,10 @@ relevant key.  ``SimCache`` holds the three sweep-level buckets:
 * ``block_times``  — the whole priced block stage (t_fwd / t_bwd / kind_us
                      plus the transformed first-block graphs the memory
                      analyzer needs), keyed on the union of the above
+* ``serving``      — whole ``Report``s priced for the request-level serving
+                     simulator's step oracle, keyed on
+                     (model config, replica parallel key, mode,
+                     batch bucket, length bucket, cache bucket)
 
 Operator-pricing memoization lives on ``FusedEngine`` (see
 ``backend/engine.py``) but reports through the same ``CacheStats`` type so
@@ -52,7 +56,7 @@ class SimCache:
     property the bit-identical tests rely on.
     """
 
-    BUCKETS = ("ingest", "passes", "block_times")
+    BUCKETS = ("ingest", "passes", "block_times", "serving")
 
     def __init__(self, enabled: bool = True):
         self.enabled = enabled

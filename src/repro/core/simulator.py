@@ -14,7 +14,10 @@ import jax
 
 from repro.configs.base import ModelConfig
 from repro.core.backend.analytical import AnalyticalEngine
-from repro.core.backend.collectives import GroupSpec, hierarchical_collective_time_us
+from repro.core.backend.collectives import (
+    GroupSpec, collective_memo_clear, collective_memo_stats,
+    hierarchical_collective_time_us,
+)
 from repro.core.backend.engine import FusedEngine
 from repro.core.backend.hardware import HARDWARE, HardwareSpec
 from repro.core.backend.prediction import PredictionEngine
@@ -125,11 +128,14 @@ class Simulator:
         """Hit/miss counters for every cache layer (benchmark telemetry)."""
         out = self.cache.stats_dict()
         out["pricing"] = self.engine.stats.as_dict()
+        # module-level memo: counters aggregate over all simulators
+        out["collectives"] = collective_memo_stats().as_dict()
         return out
 
     def cache_clear(self) -> None:
         self.cache.clear()
         self.engine.cache_clear()
+        collective_memo_clear()
 
     # ------------------------------------------------------------------
     def _passes(self, cfg: ModelConfig, par: ParallelConfig, *,

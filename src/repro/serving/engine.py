@@ -5,11 +5,18 @@
 KV rows are scattered into the slot), and every engine step decodes one token
 for all active slots.  Per-slot positions make mixed-depth batches exact.
 SLO accounting (TTFT/TPOT per request) feeds the explorer's Pareto search.
+
+All timestamps flow through one injected ``clock`` (default: wall clock).
+Trace replay passes a :class:`~repro.serving.sim.workload.VirtualClock`
+driven in simulated seconds, so caller-supplied ``arrival_s`` values —
+including ``0.0`` — are honored exactly and TTFT/finish times stay on the
+trace's timebase instead of mixing in ``perf_counter`` readings.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +30,7 @@ class Request:
     rid: int
     prompt: list[int]
     max_new_tokens: int = 16
-    arrival_s: float = 0.0
+    arrival_s: float | None = None   # None: stamped by the engine's clock
     # outputs
     tokens: list[int] = field(default_factory=list)
     ttft_s: float | None = None
@@ -33,8 +40,10 @@ class Request:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
-                 cache_len: int = 512, greedy: bool = True):
+                 cache_len: int = 512, greedy: bool = True,
+                 clock: Callable[[], float] = time.perf_counter):
         self.cfg = cfg
+        self.clock = clock
         self.model = Model(cfg)
         self.params = params
         self.slots = slots
@@ -50,7 +59,8 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
-        req.arrival_s = req.arrival_s or time.perf_counter()
+        if req.arrival_s is None:    # explicit 0.0 (trace replay) is kept
+            req.arrival_s = self.clock()
         self.queue.append(req)
 
     def _free_slots(self) -> list[int]:
@@ -67,7 +77,7 @@ class ServingEngine:
                                             cache_len=self.cache_len)
             tok = int(jnp.argmax(logits[0, -1]))
             req.tokens.append(tok)
-            req.ttft_s = time.perf_counter() - req.arrival_s
+            req.ttft_s = self.clock() - req.arrival_s
             # scatter the single-request (batch=1) cache into this slot
             # (cycle leaves are layer-stacked: batch is dim 1; tail: dim 0)
             self.cache["blocks"]["cycle"] = jax.tree.map(
@@ -94,7 +104,7 @@ class ServingEngine:
         for slot, req in self.active.items():
             req.tokens.append(int(next_tok[slot]))
             if len(req.tokens) >= req.max_new_tokens:
-                req.finished_s = time.perf_counter()
+                req.finished_s = self.clock()
                 done.append(slot)
         for slot in done:
             self.finished.append(self.active.pop(slot))

@@ -1,0 +1,86 @@
+"""Step-time oracle: the core ``Simulator`` as a (mode, batch, context) pricer.
+
+The event loop asks "how long does ONE engine iteration take?" thousands of
+times per trace.  Answers repeat heavily once batch size and context length
+are bucketed (rounded up to the next power of two), so misses — a full
+``Simulator.simulate`` call on one replica — are rare and everything else is
+served from the simulator's :class:`~repro.core.simcache.SimCache`
+``serving`` bucket, which makes oracle hit rates visible in
+``Simulator.cache_stats()`` next to every other cache layer.
+
+Replica pricing: the oracle forces ``dp = pods = 1`` on the candidate's
+:class:`~repro.core.passes.base.ParallelConfig` — the event loop models a
+single engine instance, and the explorer's goodput objective splits the
+workload over (and multiplies goodput back by) the replica count.  TP/PP/
+EP/SP stay, so sharding and pipeline-latency effects are still priced.
+
+Bucketing rounds *up*, so prices are mildly conservative (a batch of 9 pays
+the batch-16 step); ``ctx_floor`` bounds the number of distinct context
+buckets, which bounds cold JAX traces per sweep.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+from repro.configs.base import ModelConfig
+from repro.core.passes.base import ParallelConfig
+from repro.core.simulator import Simulator
+
+
+def pow2_bucket(n: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(n, floor)."""
+    n = max(int(n), int(floor), 1)
+    return 1 << (n - 1).bit_length()
+
+
+@dataclass
+class StepOracle:
+    sim: Simulator
+    cfg: ModelConfig
+    par: ParallelConfig = field(default_factory=ParallelConfig)
+    ctx_floor: int = 256        # min context bucket (bounds distinct keys)
+    seq_floor: int = 16         # min prefill-length bucket
+    lookups: int = 0
+
+    def __post_init__(self):
+        self._par1 = replace(self.par, dp=1, pods=1, microbatches=1)
+
+    # ------------------------------------------------------------------
+    def _priced_s(self, mode: str, B: int, S: int, cache_len: int) -> float:
+        self.lookups += 1
+        # engine state version: a profile-DB put or prediction retrain must
+        # not serve stale priced Reports (same invalidation as block_times)
+        key = (self.cfg, self._par1.key(), mode, B, S, cache_len,
+               self.sim.engine._state_version())
+        rep = self.sim.cache.get("serving", key, lambda: self.sim.simulate(
+            self.cfg, mode=mode, global_batch=B, seq_len=S, par=self._par1,
+            remat="none", cache_len=cache_len))
+        return rep.step_time_us / 1e6
+
+    def decode_step_s(self, batch: int, ctx: int) -> float:
+        """One decode iteration: ``batch`` sequences, deepest context ``ctx``."""
+        B = pow2_bucket(batch)
+        C = pow2_bucket(ctx, self.ctx_floor)
+        return self._priced_s("decode", B, C, C)
+
+    def prefill_s(self, batch: int, seq: int) -> float:
+        """One batched prefill of ``batch`` prompts padded to ``seq`` tokens."""
+        B = pow2_bucket(batch)
+        S = pow2_bucket(seq, self.seq_floor)
+        return self._priced_s("prefill", B, S, 0)
+
+    def mixed_step_s(self, n_decode: int, ctx: int, chunk_tokens: int) -> float:
+        """Chunked-prefill iteration: a prompt chunk plus a decode batch.
+
+        Priced as chunk-prefill + decode serialized within the iteration —
+        an upper bound (a fused mixed kernel would overlap some of the two),
+        conservative in the same direction as the bucket rounding."""
+        t = self.prefill_s(1, chunk_tokens)
+        if n_decode > 0:
+            t += self.decode_step_s(n_decode, ctx)
+        return t
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Cumulative serving-bucket hit/miss counters of the owning sim."""
+        return dict(self.sim.cache_stats().get("serving", {}))

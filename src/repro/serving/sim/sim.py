@@ -1,0 +1,225 @@
+"""Discrete-event serving simulator: continuous batching over predicted steps.
+
+This is the request-level layer the paper's deployment case study needs:
+instead of executing a model, every engine iteration is *priced* by the core
+:class:`~repro.core.simulator.Simulator` (through the memoized
+:class:`~repro.serving.sim.oracle.StepOracle`) and a discrete-event loop
+advances simulated time, so a 500-request trace replays in seconds of wall
+time while producing the TTFT/TPOT/goodput distributions a real deployment
+would measure.
+
+Event loop invariants:
+
+* A pool (one engine instance) runs at most one iteration at a time; when a
+  ``STEP_DONE`` fires, token accounting happens first, then every idle pool
+  gets a chance to plan its next step.
+* Requests finish exactly once: the first token is emitted by the step that
+  completes the prompt (prefill counts the first output token, the standard
+  TTFT convention), the remaining ``output_len - 1`` tokens by decode steps.
+* Disaggregated prefill/decode expands into two pools; completing a prefill
+  on a ``role="prefill"`` pool schedules a delayed ``ARRIVAL`` (KV transfer)
+  at the decode pool.
+* All times come from the seeded workload and the deterministic oracle, and
+  event ties break on insertion order — identical runs are bit-identical.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.configs.base import ModelConfig
+from repro.core.passes.base import ParallelConfig
+from repro.core.simulator import Simulator
+from repro.serving.sim.events import ARRIVAL, STEP_DONE, EventQueue
+from repro.serving.sim.oracle import StepOracle
+from repro.serving.sim.policies import (
+    ChunkedPrefill, ContinuousBatching, DecodeOnly, DisaggregatedPD,
+    PrefillOnly, StaticBatching, StepPlan,
+)
+from repro.serving.sim.report import SLO, ServingReport
+from repro.serving.sim.workload import SimRequest, Workload, synthesize
+
+
+@dataclass
+class Pool:
+    """One engine instance: a queue, a running batch, busy-time accounting."""
+    name: str
+    policy: object
+    role: str = "both"                  # both | prefill | decode
+    queue: deque = field(default_factory=deque)
+    running: list = field(default_factory=list)
+    prefilling: list = field(default_factory=list)
+    pending_arrivals: int = 0
+    busy: bool = False
+    busy_s: float = 0.0
+    phase_s: dict = field(default_factory=dict)       # step kind -> seconds
+    steps_by_kind: dict = field(default_factory=dict)  # step kind -> count
+    n_steps: int = 0
+
+
+class ServingSimulator:
+    """Replay a :class:`Workload` through a batching policy, pricing every
+    engine iteration with the step oracle."""
+
+    def __init__(self, sim: Simulator, cfg: ModelConfig, *,
+                 par: ParallelConfig | None = None, policy=None,
+                 oracle: StepOracle | None = None, ctx_floor: int = 256):
+        self.cfg = cfg
+        self.par = par or ParallelConfig()
+        self.policy = policy or ContinuousBatching()
+        self.oracle = oracle or StepOracle(sim, cfg, self.par,
+                                           ctx_floor=ctx_floor)
+
+    # ------------------------------------------------------------------
+    def _pools(self) -> tuple[list[Pool], float]:
+        p = self.policy
+        if isinstance(p, DisaggregatedPD):
+            return [Pool("prefill", PrefillOnly(p.prefill_batch), role="prefill"),
+                    Pool("decode", DecodeOnly(p.decode_batch), role="decode")], \
+                p.transfer_s
+        return [Pool("engine", p)], 0.0
+
+    def _price_s(self, plan: StepPlan) -> float:
+        o = self.oracle
+        if plan.kind == "decode":
+            ctx = max(r.prompt_len + r.decoded for r in plan.decode)
+            return o.decode_step_s(len(plan.decode), ctx)
+        if plan.kind == "prefill":
+            seq = max(chunk for _, chunk in plan.prefill)
+            return o.prefill_s(len(plan.prefill), seq)
+        ctx = max((r.prompt_len + r.decoded for r in plan.decode), default=0)
+        chunk = sum(c for _, c in plan.prefill)
+        return o.mixed_step_s(len(plan.decode), ctx, chunk)
+
+    def _finish_step(self, pool: Pool, plan: StepPlan, now: float,
+                     evq: EventQueue, pools: list[Pool], transfer_s: float,
+                     finished: list[SimRequest]) -> None:
+        pool.busy = False
+        for r, chunk in plan.prefill:
+            r.prefilled += chunk
+            if r.prefilled >= r.prompt_len:
+                pool.prefilling.remove(r)
+                r.first_token_s = now       # prefill emits the first token
+                r.decoded = 1
+                if r.decoded >= r.output_len:
+                    r.finished_s = now
+                    finished.append(r)
+                elif pool.role == "prefill":
+                    evq.push(now + transfer_s, ARRIVAL, (pools[1], r))
+                else:
+                    pool.running.append(r)
+        for r in plan.decode:
+            r.decoded += 1
+            if r.decoded >= r.output_len:
+                r.finished_s = now
+                pool.running.remove(r)
+                finished.append(r)
+
+    # ------------------------------------------------------------------
+    def run(self, workload: Workload, *, slo: SLO | None = None,
+            max_steps: int = 2_000_000) -> ServingReport:
+        reqs = sorted((r.reset_copy() for r in workload.requests),
+                      key=lambda r: r.arrival_s)
+        pools, transfer_s = self._pools()
+        evq = EventQueue()
+        for r in reqs:
+            evq.push(r.arrival_s, ARRIVAL, (pools[0], r))
+        # only the entry pool knows its arrival count up front; downstream
+        # pools (disaggregated decode) receive an unknowable subset via
+        # migration, so a wait-for-arrivals policy must not wait on them
+        pools[0].pending_arrivals = len(reqs)
+        finished: list[SimRequest] = []
+        stats0 = self.oracle.stats()
+        steps = 0
+        while evq:
+            ev = evq.pop()
+            now = ev.time
+            if ev.kind == ARRIVAL:
+                pool, r = ev.payload
+                pool.queue.append(r)
+                pool.pending_arrivals = max(pool.pending_arrivals - 1, 0)
+                if r.enqueue_s is None:
+                    r.enqueue_s = now
+            else:                                   # STEP_DONE
+                pool, plan = ev.payload
+                self._finish_step(pool, plan, now, evq, pools, transfer_s,
+                                  finished)
+            for pool in pools:
+                if pool.busy:
+                    continue
+                plan = pool.policy.plan(pool, now)
+                if plan is None:
+                    continue
+                steps += 1
+                if steps > max_steps:
+                    raise RuntimeError(
+                        f"serving sim exceeded {max_steps} steps "
+                        f"({len(finished)}/{len(reqs)} finished)")
+                dt = self._price_s(plan)
+                for r, _ in plan.prefill:
+                    if r.start_s is None:
+                        r.start_s = now
+                for r in plan.decode:
+                    if r.start_s is None:
+                        r.start_s = now
+                pool.busy = True
+                pool.n_steps += 1
+                pool.busy_s += dt
+                pool.phase_s[plan.kind] = pool.phase_s.get(plan.kind, 0.0) + dt
+                pool.steps_by_kind[plan.kind] = \
+                    pool.steps_by_kind.get(plan.kind, 0) + 1
+                evq.push(now + dt, STEP_DONE, (pool, plan))
+        if len(finished) != len(reqs):
+            raise RuntimeError(
+                f"serving sim deadlocked: {len(reqs) - len(finished)} of "
+                f"{len(reqs)} requests unfinished under {self.policy.name}")
+        stats1 = self.oracle.stats()
+        delta = {k: stats1.get(k, 0) - stats0.get(k, 0)
+                 for k in ("hits", "misses")}
+        delta["hit_rate"] = round(
+            delta["hits"] / max(delta["hits"] + delta["misses"], 1), 4)
+        return ServingReport.build(finished, pools, slo, delta)
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class ServingScenario:
+    """A request-level what-if the explorer can rank candidates by.
+
+    ``evaluate`` turns an explorer candidate into a per-replica serving run:
+    the workload is round-robin split over the candidate's ``dp * pods``
+    replicas, the candidate's per-replica batch (``B_local``) becomes the
+    policy's admission cap, and the reported goodput is scaled back to the
+    system level — so a config with more replicas competes on aggregate
+    SLO-attainment throughput, not per-step latency.
+    """
+    workload: Workload
+    slo: SLO = field(default_factory=SLO)
+    policy: str = "continuous"          # continuous | chunked | static
+    token_budget: int = 256             # chunked-prefill budget
+    ctx_floor: int = 256
+
+    @staticmethod
+    def default(seed: int = 0) -> "ServingScenario":
+        """A small mixed workload: enough load that admission capacity (not
+        per-step latency) decides SLO attainment — see docs/serving.md."""
+        return ServingScenario(synthesize(
+            200, arrival="poisson", rate_rps=16.0, seed=seed))
+
+    def make_policy(self, max_batch: int):
+        if self.policy == "continuous":
+            return ContinuousBatching(max_batch)
+        if self.policy == "chunked":
+            return ChunkedPrefill(max_batch, token_budget=self.token_budget)
+        if self.policy == "static":
+            return StaticBatching(max_batch)
+        raise ValueError(f"unknown scenario policy {self.policy!r}")
+
+    def evaluate(self, sim: Simulator, cfg: ModelConfig, cand) -> ServingReport:
+        replicas = max(cand.par.dp * cand.par.pods, 1)
+        wl = self.workload.thin(replicas)
+        ssim = ServingSimulator(sim, cfg, par=cand.par,
+                                policy=self.make_policy(cand.B_local()),
+                                ctx_floor=self.ctx_floor)
+        rep = ssim.run(wl, slo=self.slo)
+        return rep

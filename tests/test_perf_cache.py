@@ -185,6 +185,45 @@ def test_block_stage_cache_invalidated_on_profile_db_mutation():
     assert sim.cache_stats()["block_times"]["misses"] >= 2
 
 
+def test_collective_time_memoized_and_self_invalidating():
+    from dataclasses import replace
+
+    from repro.core.backend.collectives import (
+        GroupSpec, _hierarchical_uncached, collective_memo_clear,
+        collective_memo_stats, hierarchical_collective_time_us,
+    )
+    from repro.core.backend.hardware import TPU_V5E
+
+    collective_memo_clear()
+    args = ("all_reduce", 64e6, GroupSpec(intra_size=8, inter_size=2))
+    t1 = hierarchical_collective_time_us(*args, TPU_V5E)
+    assert t1 == _hierarchical_uncached(*args, TPU_V5E)   # memo is invisible
+    before = collective_memo_stats().hits
+    t2 = hierarchical_collective_time_us(*args, TPU_V5E)
+    assert t2 == t1 and collective_memo_stats().hits == before + 1
+
+    # the key carries the link-domain fields: different hardware (or a
+    # recalibrated link) can never be served a stale entry
+    slow = replace(TPU_V5E, name="slow",
+                   intra=replace(TPU_V5E.intra, bandwidth=1e9))
+    t_slow = hierarchical_collective_time_us(*args, slow)
+    assert t_slow > t1
+
+    collective_memo_clear()
+    assert collective_memo_stats().total == 0
+
+
+def test_simulate_exposes_collective_memo_stats():
+    sim = Simulator("tpu_v5e", engine="analytical")
+    sim.cache_clear()
+    sim.simulate(CFG, mode="decode", global_batch=8, seq_len=512,
+                 par=ParallelConfig(tp=2, dp=4), remat="none")
+    sim.simulate(CFG, mode="decode", global_batch=8, seq_len=512,
+                 par=ParallelConfig(tp=2, dp=4), remat="none")
+    st = sim.cache_stats()["collectives"]
+    assert st["hits"] > 0                        # repeat p2p terms memoized
+
+
 def test_simulate_does_not_mutate_caller_parallel_config():
     sim = Simulator("tpu_v5e", engine="analytical")
     par = ParallelConfig(tp=2, dp=2)

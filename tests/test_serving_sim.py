@@ -1,0 +1,224 @@
+"""Request-level serving simulator: deterministic workloads, conservation
+invariants under every batching policy, oracle memoization, and the
+goodput-vs-step-time objective divergence in the explorer."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import ParallelConfig, Simulator
+from repro.core.explorer import explore
+from repro.serving.sim import (
+    SLO, ChunkedPrefill, ContinuousBatching, DisaggregatedPD, LengthDist,
+    Pool, ServingScenario, ServingSimulator, StaticBatching, Workload,
+    pow2_bucket, synthesize,
+)
+from repro.serving.sim.workload import SimRequest
+
+CFG = get_config("xlstm-125m")
+PAR = ParallelConfig(tp=2)
+
+
+@pytest.fixture(scope="module")
+def sim():
+    # module-scoped: the serving oracle's misses (cold simulate calls) are
+    # the slow part; every test after the first runs warm
+    return Simulator("tpu_v5e", engine="analytical")
+
+
+def _wl(n=80, seed=3, rate=40.0):
+    return synthesize(
+        n, rate_rps=rate,
+        prompt=LengthDist("lognormal", median=64.0, sigma=0.6, cap=256),
+        output=LengthDist("lognormal", median=12.0, sigma=0.5, cap=48),
+        seed=seed)
+
+
+# ---------------- workload generation ----------------
+
+def test_workload_determinism():
+    key = lambda wl: [(r.arrival_s, r.prompt_len, r.output_len)
+                      for r in wl.requests]
+    assert key(_wl(seed=5)) == key(_wl(seed=5))
+    assert key(_wl(seed=5)) != key(_wl(seed=6))
+    wl = _wl(seed=5)
+    arrivals = [r.arrival_s for r in wl.requests]
+    assert arrivals == sorted(arrivals)
+    assert all(r.prompt_len >= 1 and r.output_len >= 1 for r in wl.requests)
+
+
+def test_bursty_and_uniform_arrivals():
+    for arrival in ("bursty", "uniform"):
+        wl = synthesize(50, arrival=arrival, rate_rps=20.0, seed=1)
+        arrivals = [r.arrival_s for r in wl.requests]
+        assert arrivals == sorted(arrivals) and len(set(arrivals)) > 1
+
+
+def test_trace_replay_and_thin():
+    wl = Workload.from_trace([(2.0, 5, 3), (0.5, 7, 1), (1.0, 2, 2)])
+    assert [r.arrival_s for r in wl.requests] == [0.5, 1.0, 2.0]
+    assert [r.prompt_len for r in wl.requests] == [7, 2, 5]
+    half = wl.thin(2)
+    assert [r.rid for r in half.requests] == [0, 2]
+    # thinned copies are reset clones, not aliases
+    half.requests[0].decoded = 99
+    assert wl.requests[0].decoded == 0
+
+
+def test_pow2_bucket():
+    assert [pow2_bucket(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert pow2_bucket(3, floor=64) == 64
+    assert pow2_bucket(100, floor=64) == 128
+
+
+# ---------------- event-loop conservation ----------------
+
+POLICIES = [
+    ContinuousBatching(8),
+    ContinuousBatching(8, admit_cap=2),
+    ChunkedPrefill(8, token_budget=128),
+    StaticBatching(8),
+    DisaggregatedPD(prefill_batch=2, decode_batch=8, transfer_s=0.002),
+]
+
+
+@pytest.mark.parametrize("policy", POLICIES, ids=lambda p: p.name)
+def test_conservation_invariants(sim, policy):
+    wl = _wl()
+    rep = ServingSimulator(sim, CFG, par=PAR, policy=policy).run(
+        wl, slo=SLO(ttft_s=1.0, tpot_ms=50.0))
+    # every submitted request finishes exactly once
+    assert rep.n_requests == wl.n_requests
+    assert sorted(r.rid for r in rep.requests) == \
+        sorted(r.rid for r in wl.requests)
+    for r in rep.requests:
+        assert r.prefilled == r.prompt_len
+        assert r.decoded == r.output_len
+        assert r.arrival_s <= r.start_s <= r.first_token_s <= r.finished_s
+    # token conservation
+    assert rep.prompt_tokens == wl.prompt_tokens
+    assert rep.output_tokens == wl.output_tokens
+    # the workload itself is never mutated (runs operate on reset copies)
+    assert all(r.decoded == 0 and r.finished_s is None for r in wl.requests)
+
+
+def test_run_is_deterministic(sim):
+    wl = _wl(seed=9)
+    ssim = ServingSimulator(sim, CFG, par=PAR, policy=ContinuousBatching(8))
+    a, b = ssim.run(wl).summary(), ssim.run(wl).summary()
+    a.pop("oracle_stats"), b.pop("oracle_stats")  # hit/miss split differs
+    assert a == b
+
+
+def test_disaggregated_pool_roles(sim):
+    rep = ServingSimulator(
+        sim, CFG, par=PAR,
+        policy=DisaggregatedPD(prefill_batch=2, decode_batch=8)).run(_wl())
+    assert set(rep.utilization) == {"prefill", "decode"}
+    assert "decode_frac" not in rep.utilization["prefill"]
+    assert "prefill_frac" not in rep.utilization["decode"]
+
+
+# ---------------- policy unit behaviour (no oracle) ----------------
+
+def _fake_reqs(n, prompt_len=100):
+    return [SimRequest(rid=i, arrival_s=0.0, prompt_len=prompt_len,
+                       output_len=4) for i in range(n)]
+
+
+def test_static_waits_for_full_gang():
+    pool = Pool("p", None)
+    pool.queue.extend(_fake_reqs(2))
+    pool.pending_arrivals = 5
+    pol = StaticBatching(4)
+    assert pol.plan(pool, 0.0) is None          # more arrivals may top it up
+    pool.pending_arrivals = 0
+    plan = pol.plan(pool, 0.0)                  # drain: partial gang admitted
+    assert plan.kind == "prefill" and len(plan.prefill) == 2
+    assert pol.plan(pool, 0.0) is None          # cohort in flight: no re-admit
+
+
+def test_chunked_prefill_respects_token_budget():
+    pool = Pool("p", None)
+    pool.running.extend(_fake_reqs(3))
+    pool.queue.extend(_fake_reqs(1, prompt_len=500))
+    pol = ChunkedPrefill(max_batch=8, token_budget=16)
+    plan = pol.plan(pool, 0.0)
+    assert plan.kind == "mixed"
+    assert len(plan.decode) == 3
+    [(head, chunk)] = plan.prefill
+    assert chunk == 16 - 3                      # decode tokens eat the budget
+    head.prefilled += chunk
+    plan2 = pol.plan(pool, 0.0)                 # same head keeps chunking
+    assert plan2.prefill[0][0] is head
+
+
+def test_continuous_admission_cap():
+    pool = Pool("p", None)
+    pool.queue.extend(_fake_reqs(6))
+    plan = ContinuousBatching(8, admit_cap=2).plan(pool, 0.0)
+    assert plan.kind == "prefill" and len(plan.prefill) == 2
+
+
+# ---------------- oracle memoization ----------------
+
+def test_oracle_memoization_across_sweep():
+    s = Simulator("tpu_v5e", engine="analytical")
+    ssim = ServingSimulator(s, CFG, par=PAR, policy=ContinuousBatching(8))
+    wl = _wl(n=60)
+    first = ssim.run(wl)
+    # bucketing keeps distinct step keys tiny vs thousands of lookups
+    assert first.oracle_stats["hits"] > 20 * first.oracle_stats["misses"]
+    second = ssim.run(wl)
+    assert second.oracle_stats["misses"] == 0   # fully served from SimCache
+    assert second.oracle_stats["hit_rate"] == 1.0
+    assert s.cache_stats()["serving"]["hits"] > 0
+
+
+def test_oracle_invalidated_on_engine_state_mutation():
+    # same workflow as the block-stage cache test: profile-then-resimulate
+    # must never serve stale priced steps from the serving bucket
+    from repro.core.backend.profiling import ProfileDB
+
+    db = ProfileDB(path="/nonexistent/empty.json")
+    s = Simulator("tpu_v5e", engine="profiling", db=db)
+    ssim = ServingSimulator(s, CFG, par=PAR, policy=ContinuousBatching(8))
+    wl = _wl(n=20)
+    ssim.run(wl)
+    misses0 = s.cache_stats()["serving"]["misses"]
+    db.put("tpu_v5e|matmul|1,1,1|bf16", 1.0, {})   # any external put
+    second = ssim.run(wl)
+    # the version bump keys every step lookup afresh (no stale hits)
+    assert second.oracle_stats["misses"] > 0
+    assert s.cache_stats()["serving"]["misses"] > misses0
+
+
+# ---------------- explorer goodput objective ----------------
+
+def test_goodput_ranking_diverges_from_step_time(sim):
+    # under heavy load small batches win on step time but starve admission;
+    # the documented scenario in docs/serving.md
+    wl = synthesize(160, rate_rps=2000.0,
+                    prompt=LengthDist("lognormal", median=64.0, sigma=0.5,
+                                      cap=256),
+                    output=LengthDist("fixed", value=24), seed=11)
+    scen = ServingScenario(wl, slo=SLO(ttft_s=0.05, tpot_ms=2.0))
+    res = explore(sim, CFG, mode="decode", seq_len=512, chips=8,
+                  tp_choices=(1, 2), pp_choices=(1,),
+                  batch_choices=(8, 32), objective="goodput", scenario=scen)
+    assert res.evaluated and all(r.serving is not None for r in res.evaluated)
+    by_step = res.ranked("step_time")
+    by_goodput = res.ranked("goodput")
+    assert [r.cand.key() for r in by_step] != \
+        [r.cand.key() for r in by_goodput]
+    assert by_goodput[0].goodput_rps > by_step[0].goodput_rps
+    # the goodput winner trades per-step latency for admission capacity
+    assert by_goodput[0].cand.global_batch > by_step[0].cand.global_batch
+
+
+def test_step_time_objective_requires_no_serving(sim):
+    res = explore(sim, CFG, mode="decode", seq_len=512, chips=4,
+                  tp_choices=(1, 2), pp_choices=(1,), batch_choices=(8,))
+    assert res.ranked("step_time")
+    with pytest.raises(ValueError):
+        res.ranked("goodput")
+    with pytest.raises(ValueError):
+        explore(sim, CFG, mode="decode", chips=4, objective="nonsense")

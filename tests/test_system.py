@@ -45,6 +45,31 @@ def test_serving_engine_continuous_batching_matches_sequential():
     assert req.tokens == out
 
 
+def test_serving_engine_virtual_clock_trace_replay():
+    """Caller-supplied arrival_s (including 0.0) must be honored and TTFT
+    computed on the injected clock's timebase, not wall-clock."""
+    from repro.serving import VirtualClock
+    cfg = get_tiny_config("gemma-7b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    clk = VirtualClock()
+    eng = ServingEngine(cfg, params, slots=2, cache_len=64, clock=clk)
+    traced = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2, arrival_s=0.0)
+    eng.submit(traced)
+    assert traced.arrival_s == 0.0          # was silently replaced pre-fix
+    stamped = Request(rid=1, prompt=[4, 5], max_new_tokens=2)
+    clk.advance_to(0.125)
+    eng.submit(stamped)
+    assert stamped.arrival_s == 0.125       # engine stamps via the clock
+    clk.advance_to(0.25)
+    finished = eng.run_until_drained(max_steps=50)
+    assert len(finished) == 2
+    assert finished[0].ttft_s >= 0.0
+    by_rid = {r.rid: r for r in finished}
+    assert by_rid[0].ttft_s == pytest.approx(0.25)   # prefill at t=0.25
+    assert by_rid[1].ttft_s == pytest.approx(0.125)
+
+
 def test_dynamic_sp_beats_static_zigzag():
     seq_lens = [512, 1024, 8192, 256, 16384, 768]
     static = plan_batch(seq_lens, d_head=128, n_heads=64, sp_world=8, dynamic=False)
