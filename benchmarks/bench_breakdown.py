@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import PAR1, make_cpu_simulator, median_time_us
+from repro.api import Cluster, PrefillWorkload, SimSpec
 from repro.configs import get_tiny_config
 from repro.models import Model, init_params, layers as L
 from repro.models.params import block_cycle
@@ -50,8 +51,9 @@ def run() -> list[dict]:
     t_others = max(t_total - n_layers * (t_attn + t_ffn), 0.0)
 
     # ---- simulated per-class ----
-    rep = sim.simulate(cfg, mode="prefill", global_batch=B, seq_len=S, par=PAR1,
-                       remat="none", keep_timelines=True)
+    rep = sim.run(SimSpec(cfg, cluster=Cluster(sim.hw), parallel=PAR1,
+                          workload=PrefillWorkload(global_batch=B, seq_len=S)),
+                  keep_timelines=True)
     tl = rep.block_timelines[list(rep.block_timelines)[0]]
     sim_attn = sim_ffn = sim_other = 0.0
     for iv in tl.intervals:

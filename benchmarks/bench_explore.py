@@ -11,19 +11,21 @@ from __future__ import annotations
 
 import time
 
+from repro.api import Cluster, DecodeWorkload, SimSpec, SweepSpace, sweep
 from repro.configs import get_config
-from repro.core import ParallelConfig, Simulator
-from repro.core.explorer import explore
+from repro.core import Simulator
 
 
 def run() -> list[dict]:
     cfg = get_config("qwen2.5-32b")
     sim = Simulator("tpu_v5e", engine="analytical")
+    base = SimSpec(cfg, cluster=Cluster("tpu_v5e", chips=256,
+                                        memory_limit=16e9),
+                   workload=DecodeWorkload(seq_len=8192))
     t0 = time.time()
-    res = explore(sim, cfg, mode="decode", seq_len=8192, chips=256,
-                  tp_choices=(4, 8, 16, 32), pp_choices=(1, 2, 4),
-                  batch_choices=(16, 32, 64, 128, 256, 512),
-                  memory_limit=16e9)
+    res = sweep(SweepSpace(base, {"tp": (4, 8, 16, 32), "pp": (1, 2, 4),
+                                  "batch": (16, 32, 64, 128, 256, 512)}),
+                sim=sim)
     wall = time.time() - t0
     front = res.pareto()
     pr = res.cache_stats.get("pricing", {"hits": 0, "misses": 0})

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import PAR1, make_cpu_simulator
+from repro.api import Cluster, SimSpec, TrainWorkload
 from repro.configs import get_tiny_config
 from repro.launch.specs import input_specs
 from repro.models import Model, abstract_params
@@ -43,8 +44,9 @@ def run() -> list[dict]:
     xla_total = ma.argument_size_in_bytes + ma.temp_size_in_bytes
 
     sim = make_cpu_simulator("analytical")
-    rep = sim.simulate(cfg, mode="train", global_batch=B, seq_len=S, par=PAR1,
-                       remat="none")
+    rep = sim.run(SimSpec(cfg, cluster=Cluster(sim.hw), parallel=PAR1,
+                          workload=TrainWorkload(global_batch=B, seq_len=S,
+                                                 remat="none")))
     sim_total = rep.memory.total
     rows.append({"bench": "fig9_memory", "case": "olmoe-tiny/train(B2,S512)",
                  "xla_bytes": int(xla_total), "sim_bytes": int(sim_total),
@@ -60,15 +62,14 @@ def run() -> list[dict]:
         rec = json.loads(rec_path.read_text())
         xla_dev = (rec["memory_analysis"]["argument_bytes"]
                    + rec["memory_analysis"]["temp_bytes"])
+        from repro.configs import get_config
         from repro.core import ParallelConfig, Simulator
         sim2 = Simulator("tpu_v5e", engine="analytical")
         par = ParallelConfig(tp=16, dp=16, sp=16, zero_stage=rec["zero_stage"])
-        rep2 = sim2.simulate(get_tiny_config("gemma-7b").replace(
-            **{}), mode="train", global_batch=8, seq_len=128, par=par)
-        from repro.configs import get_config
-        rep2 = sim2.simulate(get_config("gemma-7b"), mode="train",
-                             global_batch=256, seq_len=4096, par=par,
-                             remat="block")
+        rep2 = sim2.run(SimSpec(
+            get_config("gemma-7b"), cluster=Cluster("tpu_v5e"), parallel=par,
+            workload=TrainWorkload(global_batch=256, seq_len=4096,
+                                   remat="block")))
         rows.append({"bench": "fig9_memory", "case": "gemma-7b/train_4k@v5e-256",
                      "xla_bytes_per_dev": int(xla_dev),
                      "sim_bytes_per_dev": int(rep2.memory.total),

@@ -13,9 +13,9 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
+from repro.api import Cluster, SimSpec, TrainWorkload
 from repro.configs import get_config
 from repro.core import ParallelConfig, Simulator
-from repro.core.backend.hardware import HARDWARE
 
 REPO = Path(__file__).resolve().parents[1]
 
@@ -29,7 +29,9 @@ def run() -> list[dict]:
     for hw in ("tpu_v5e", "tpu_v5p", "a100_80g", "h100_sxm"):
         sim = Simulator(hw, engine="analytical")
         par = ParallelConfig(tp=8, dp=4, sp=8, zero_stage=1)
-        r = sim.simulate(cfg, mode="train", global_batch=64, seq_len=4096, par=par)
+        r = sim.run(SimSpec(cfg, cluster=Cluster(hw), parallel=par,
+                            workload=TrainWorkload(global_batch=64,
+                                                   seq_len=4096)))
         if base is None:
             base = r.step_time_us
         rows.append({"bench": "fig11_scale", "case": f"hw/{hw}",
@@ -54,7 +56,9 @@ def run() -> list[dict]:
     weak_ok = True
     for chips, par in sweeps:
         gb = max(chips // 16, 1) * 64
-        r = sim.simulate(cfg, mode="train", global_batch=gb, seq_len=4096, par=par)
+        r = sim.run(SimSpec(cfg, cluster=Cluster("tpu_v5e"), parallel=par,
+                            workload=TrainWorkload(global_batch=gb,
+                                                   seq_len=4096)))
         rows.append({"bench": "fig11_scale", "case": f"chips/{chips}",
                      "chips": chips, "global_batch": gb,
                      "step_ms": round(r.step_time_us / 1e3, 1),
@@ -71,8 +75,9 @@ def run() -> list[dict]:
     if rec_path.exists():
         rec = json.loads(rec_path.read_text())
         par = ParallelConfig(tp=16, dp=16, sp=16, zero_stage=rec["zero_stage"])
-        r = sim.simulate(cfg, mode="train", global_batch=256, seq_len=4096,
-                         par=par, remat="block")
+        r = sim.run(SimSpec(cfg, cluster=Cluster("tpu_v5e"), parallel=par,
+                            workload=TrainWorkload(global_batch=256,
+                                                   seq_len=4096)))
         sim_flops_dev = r.model_flops / 256  # useful flops per device
         xla_flops_dev = rec["flops_per_device"]
         rows.append({

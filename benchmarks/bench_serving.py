@@ -11,11 +11,11 @@ from __future__ import annotations
 
 import time
 
+from repro.api import Cluster, ServingWorkload, SimSpec
 from repro.configs import get_config
 from repro.core import ParallelConfig, Simulator
 from repro.serving.sim import (
-    SLO, ChunkedPrefill, ContinuousBatching, DisaggregatedPD, LengthDist,
-    ServingSimulator, StaticBatching, synthesize,
+    SLO, DisaggregatedPD, LengthDist, ServingSimulator,
 )
 
 
@@ -25,16 +25,20 @@ def run() -> list[dict]:
     par = ParallelConfig(tp=8)
     # rate tuned to ~0.85 utilization of the tp=8 replica (~3.3k tok/s at
     # batch 32): loaded enough that policies separate, not collapsed
-    wl = synthesize(
-        600, arrival="poisson", rate_rps=4.0,
-        prompt=LengthDist("lognormal", median=512.0, sigma=0.6, cap=3072),
-        output=LengthDist("lognormal", median=96.0, sigma=0.5, cap=256),
-        seed=7)
-    slo = SLO(ttft_s=2.0, tpot_ms=60.0)
+    base = SimSpec(cfg, cluster=Cluster("tpu_v5e"), parallel=par,
+                   workload=ServingWorkload(
+                       n_requests=600, arrival="poisson", rate_rps=4.0,
+                       prompt=LengthDist("lognormal", median=512.0, sigma=0.6,
+                                         cap=3072),
+                       output=LengthDist("lognormal", median=96.0, sigma=0.5,
+                                         cap=256),
+                       seed=7, slo=SLO(ttft_s=2.0, tpot_ms=60.0),
+                       max_batch=32, token_budget=512))
+    wl = base.workload.build()
     policies = [
-        ("continuous", ContinuousBatching(32)),
-        ("chunked_prefill", ChunkedPrefill(32, token_budget=512)),
-        ("static", StaticBatching(32)),
+        ("continuous", "continuous"),
+        ("chunked_prefill", "chunked"),
+        ("static", "static"),
         ("disaggregated", DisaggregatedPD(prefill_batch=4, decode_batch=32,
                                           transfer_s=0.002)),
     ]
@@ -42,7 +46,13 @@ def run() -> list[dict]:
     total_wall = 0.0
     for name, pol in policies:
         t0 = time.time()
-        rep = ServingSimulator(sim, cfg, par=par, policy=pol).run(wl, slo=slo)
+        if isinstance(pol, str):                 # spec-carried policy
+            from repro.api import spec_replace
+            rep = ServingSimulator(sim).run(
+                spec_replace(base, {"workload.policy": pol}))
+        else:                                    # custom policy object
+            rep = ServingSimulator(sim, cfg, par=par, policy=pol).run(
+                wl, slo=base.workload.slo)
         wall = time.time() - t0
         total_wall += wall
         s = rep.summary()

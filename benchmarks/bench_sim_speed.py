@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import time
 
+from repro.api import Cluster, SimSpec, TrainWorkload
 from repro.configs import get_config
 from repro.core import ParallelConfig, Simulator
 
@@ -28,10 +29,12 @@ def run() -> list[dict]:
     sim = Simulator("tpu_v5e", engine="analytical", cache=False)
     cfg = get_config("qwen2.5-32b")
     par = ParallelConfig(tp=16, dp=16, pods=2, sp=16, zero_stage=1)
+    spec = SimSpec(cfg, cluster=Cluster("tpu_v5e", pods=2), parallel=par,
+                   workload=TrainWorkload(global_batch=256, seq_len=4096))
     t0 = time.time()
     n = 6
     for i in range(n):
-        sim.simulate(cfg, mode="train", global_batch=256, seq_len=4096, par=par)
+        sim.run(spec)
     sim_s = (time.time() - t0) / n
     cluster_chip_seconds = PROFILE_MINUTES_PER_POINT * 60 * CHIPS
     sim_chip_seconds = sim_s  # one CPU core
@@ -46,12 +49,12 @@ def run() -> list[dict]:
     # ---- cold vs warm: what the memoization stack buys per re-evaluation ----
     warm_sim = Simulator("tpu_v5e", engine="analytical", cache=True)
     t0 = time.time()
-    warm_sim.simulate(cfg, mode="train", global_batch=256, seq_len=4096, par=par)
+    warm_sim.run(spec)
     cold_s = time.time() - t0        # first call on a fresh cache
     n_warm = 20
     t0 = time.time()
     for _ in range(n_warm):
-        warm_sim.simulate(cfg, mode="train", global_batch=256, seq_len=4096, par=par)
+        warm_sim.run(spec)
     warm_s = (time.time() - t0) / n_warm
     stats = warm_sim.cache_stats()
     rows.append({
@@ -63,5 +66,6 @@ def run() -> list[dict]:
         "pricing_hit_rate": stats["pricing"]["hit_rate"],
         "block_stage_hit_rate": stats["block_times"]["hit_rate"],
         "ingest_hit_rate": stats["ingest"]["hit_rate"],
+        "memory_hit_rate": stats["memory"]["hit_rate"],
     })
     return rows

@@ -10,8 +10,8 @@ from __future__ import annotations
 from pathlib import Path
 
 from benchmarks.common import PAR1, make_cpu_simulator
+from repro.api import Cluster, PrefillWorkload, SimSpec
 from repro.configs import get_tiny_config
-from repro.core import ParallelConfig, Simulator
 from repro.core.passes.pipeline import make_schedule
 from repro.core.timeline import pp_trace, to_chrome_trace, write_trace
 
@@ -21,8 +21,10 @@ OUT = Path(__file__).resolve().parents[1] / "results" / "traces"
 def run() -> list[dict]:
     sim = make_cpu_simulator("fused")
     cfg = get_tiny_config("qwen2.5-32b")
-    rep = sim.simulate(cfg, mode="prefill", global_batch=2, seq_len=256,
-                       par=PAR1, remat="none", keep_timelines=True)
+    rep = sim.run(SimSpec(cfg, cluster=Cluster(sim.hw), parallel=PAR1,
+                          workload=PrefillWorkload(global_batch=2,
+                                                   seq_len=256)),
+                  keep_timelines=True)
     kind = next(iter(rep.block_timelines))
     tl = rep.block_timelines[kind]
     p1 = write_trace(to_chrome_trace(tl, pid="layer0"), OUT / "single_layer.json")

@@ -14,6 +14,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import Cluster, SimSpec, STEP_WORKLOADS
 from repro.configs import get_tiny_config
 from repro.core import ParallelConfig, Simulator
 from repro.core.backend.profiling import ProfileDB
@@ -85,9 +86,12 @@ def make_cpu_simulator(engine: str = "fused") -> Simulator:
 
 def simulate(sim: Simulator, cfg, *, mode: str, B: int, S: int,
              cache_len: int = 0, calib: float = 1.0) -> float:
-    rep = sim.simulate(cfg, mode=mode, global_batch=B, seq_len=S,
-                       par=PAR1, remat="none", cache_len=cache_len)
-    return rep.step_time_us * calib
+    kw = dict(global_batch=B, seq_len=S, cache_len=cache_len)
+    if mode == "train":
+        kw["remat"] = "none"     # ground-truth CPU step runs without remat
+    spec = SimSpec(cfg, cluster=Cluster(sim.hw), parallel=PAR1,
+                   workload=STEP_WORKLOADS[mode](**kw))
+    return sim.run(spec).step_time_us * calib
 
 
 def calibration_factor(sim: Simulator) -> float:

@@ -1,17 +1,27 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows per the repo contract, plus the
-full JSON record to results/benchmarks.json.
+full JSON record to results/benchmarks.json and a compact perf-trajectory
+summary (configs/sec, cache hit rates, serving req/s) to the repo-root
+``BENCH_sim.json`` so the numbers are comparable across PRs.
+
+The shimmed legacy surfaces (``simulate()``/``explore()`` kwargs) are for
+external users only: this harness escalates ``CharonDeprecationWarning`` to
+an error so no benchmark silently regresses onto the deprecated path.
 """
 from __future__ import annotations
 
+import datetime
 import json
 import sys
 import time
 import traceback
+import warnings
 from pathlib import Path
 
-RESULTS = Path(__file__).resolve().parents[1] / "results"
+REPO = Path(__file__).resolve().parents[1]
+RESULTS = REPO / "results"
+BENCH_SIM = REPO / "BENCH_sim.json"
 
 BENCHES = [
     ("fig7_accuracy", "benchmarks.bench_accuracy"),
@@ -27,8 +37,53 @@ BENCHES = [
 ]
 
 
+def _perf_summary(rows: list[dict]) -> dict:
+    """Extract the cross-PR perf-trajectory metrics from benchmark rows."""
+    out: dict = {}
+    for r in rows:
+        bench, case = r.get("bench"), r.get("case", "")
+        if bench == "fig1_sim_cost" and case == "cache_warm_vs_cold":
+            out["warm_configs_per_sec"] = r.get("configs_per_sec")
+            out["cold_seconds"] = r.get("cold_seconds")
+            out["cache_hit_rates"] = {
+                k: r.get(f"{k}_hit_rate")
+                for k in ("pricing", "block_stage", "ingest", "memory")}
+        elif bench == "fig13_dse" and case == "exploration":
+            out["sweep_configs_per_sec"] = r.get("configs_per_sec")
+            out["sweep_wall_s"] = r.get("wall_s")
+            out["sweep_pricing_hit_rate"] = r.get("pricing_hit_rate")
+            out["sweep_n_reuse_groups"] = r.get("n_reuse_groups")
+        elif bench == "serving_sim" and "sim_requests_per_sec" in r:
+            out.setdefault("serving_requests_per_sec", {})[case] = \
+                r["sim_requests_per_sec"]
+            out.setdefault("serving_oracle_hit_rate", {})[case] = \
+                r.get("oracle_hit_rate")
+    return out
+
+
+def _write_bench_sim(rows: list[dict]) -> None:
+    summary = _perf_summary(rows)
+    if not summary:
+        return
+    # partial runs (run.py <filter>) update only the keys they produce
+    prev = {}
+    if BENCH_SIM.exists():
+        try:
+            prev = json.loads(BENCH_SIM.read_text())
+        except (json.JSONDecodeError, OSError):
+            prev = {}
+    prev.update(summary)
+    # UTC: CI's freshness check compares against `date -u +%F`
+    prev["updated"] = datetime.datetime.now(datetime.timezone.utc) \
+        .date().isoformat()
+    BENCH_SIM.write_text(json.dumps(prev, indent=1, sort_keys=True) + "\n")
+
+
 def main() -> None:
     import importlib
+
+    from repro.api import CharonDeprecationWarning
+    warnings.simplefilter("error", CharonDeprecationWarning)
     all_rows = []
     print("name,us_per_call,derived")
     only = sys.argv[1] if len(sys.argv) > 1 else None
@@ -49,6 +104,7 @@ def main() -> None:
         all_rows.extend(rows)
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / "benchmarks.json").write_text(json.dumps(all_rows, indent=1, default=str))
+    _write_bench_sim(all_rows)
     # human-readable dump
     for r in all_rows:
         print("  ", json.dumps(r, default=str)[:400])

@@ -3,17 +3,23 @@ serving config maximising TPS/chip under a TPOT SLO for qwen2.5-32b on a
 v5e-256 pod.
 
     PYTHONPATH=src python examples/explore_configs.py
+
+The sweep is declarative: a base ``SimSpec`` plus named axes over any spec
+field.  Here it reproduces the classic (tp, pp, batch) grid; see
+``examples/sweep_whatif.py`` for axes the old ``explore()`` could not
+express (seq_len, quantization, hardware).
 """
+from repro.api import Cluster, DecodeWorkload, SimSpec, SweepSpace, sweep
 from repro.configs import get_config
 from repro.core import Simulator
-from repro.core.explorer import explore
 
 cfg = get_config("qwen2.5-32b")
 sim = Simulator("tpu_v5e", engine="analytical")
 
-res = explore(sim, cfg, mode="decode", seq_len=8192, chips=256,
-              tp_choices=(4, 8, 16, 32), pp_choices=(1, 2, 4),
-              batch_choices=(16, 32, 64, 128, 256), memory_limit=16e9)
+base = SimSpec(cfg, cluster=Cluster("tpu_v5e", chips=256, memory_limit=16e9),
+               workload=DecodeWorkload(seq_len=8192))
+res = sweep(SweepSpace(base, {"tp": (4, 8, 16, 32), "pp": (1, 2, 4),
+                              "batch": (16, 32, 64, 128, 256)}), sim=sim)
 print(f"evaluated {len(res.evaluated)} configs "
       f"({len(res.pruned)} pruned) in {res.wall_time_s:.1f}s\n")
 

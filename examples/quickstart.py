@@ -1,7 +1,11 @@
 """Quickstart: simulate LLM training + serving performance in 20 lines.
 
     PYTHONPATH=src python examples/quickstart.py
+
+One frozen ``SimSpec`` describes any simulation — model + cluster +
+parallelism + workload — and ``Simulator.run(spec)`` prices it.
 """
+from repro.api import Cluster, DecodeWorkload, SimSpec, TrainWorkload
 from repro.configs import get_config
 from repro.core import ParallelConfig, Simulator
 
@@ -10,9 +14,12 @@ cfg = get_config("qwen2.5-32b")
 
 # a TPU v5e pod: 16-way tensor/sequence parallel x 16-way data parallel
 par = ParallelConfig(tp=16, dp=16, sp=16, zero_stage=1)
+cluster = Cluster("tpu_v5e", chips=256)
 sim = Simulator("tpu_v5e", engine="analytical")
 
-train = sim.simulate(cfg, mode="train", global_batch=256, seq_len=4096, par=par)
+train = sim.run(SimSpec(cfg, cluster=cluster, parallel=par,
+                        workload=TrainWorkload(global_batch=256,
+                                               seq_len=4096)))
 print(f"train_4k @ v5e-256: {train.step_time_us/1e3:8.1f} ms/step   "
       f"MFU {train.mfu:.2%}   {train.tokens_per_s:,.0f} tok/s")
 print(f"  breakdown(ms): " + ", ".join(
@@ -22,8 +29,9 @@ print(f"  memory/device: {train.memory.total/1e9:.1f} GB "
       f"activations {train.memory.activations_peak/1e9:.1f}, "
       f"saved {train.memory.saved_activations/1e9:.1f})")
 
-decode = sim.simulate(cfg, mode="decode", global_batch=128, seq_len=32768,
-                      par=par, remat="none")
+decode = sim.run(SimSpec(cfg, cluster=cluster, parallel=par,
+                         workload=DecodeWorkload(global_batch=128,
+                                                 seq_len=32768)))
 print(f"decode_32k: TPOT {decode.tpot_ms:.1f} ms   "
       f"{decode.tps_per_chip:.1f} tok/s/chip   "
       f"KV cache {decode.memory.kv_cache/1e9:.1f} GB/device")

@@ -4,59 +4,73 @@
 
 Part 1 replays one synthetic bursty workload through four batching policies
 and prints the latency/goodput table a deployment decision reads.  Part 2
-runs the explorer twice over the same candidates — ranked by steady-state
-step time vs by request-level SLO goodput — and shows that the two
-objectives pick different winners (the docs/serving.md scenario).
+runs the same declarative sweep twice over the candidates — ranked by
+steady-state step time vs by request-level SLO goodput — and shows that the
+two objectives pick different winners (the docs/serving.md scenario).
 """
 import time
 
+from repro.api import (
+    Cluster, DecodeWorkload, ServingWorkload, SimSpec, SweepSpace, sweep,
+)
 from repro.configs import get_config
 from repro.core import ParallelConfig, Simulator
-from repro.core.explorer import explore
 from repro.serving.sim import (
     SLO, ChunkedPrefill, ContinuousBatching, DisaggregatedPD, LengthDist,
-    ServingScenario, ServingSimulator, StaticBatching, synthesize,
+    ServingSimulator, StaticBatching,
 )
 
 cfg = get_config("xlstm-125m")
 sim = Simulator("tpu_v5e", engine="analytical")
 par = ParallelConfig(tp=2)
 
-# ---- part 1: one workload, four policies --------------------------------
-wl = synthesize(300, arrival="bursty", rate_rps=60.0, burst_factor=4.0,
-                prompt=LengthDist("lognormal", median=64.0, sigma=0.6, cap=512),
-                output=LengthDist("lognormal", median=24.0, sigma=0.5, cap=96),
-                seed=42)
-slo = SLO(ttft_s=0.5, tpot_ms=5.0)
+# ---- part 1: one workload spec, four policies --------------------------
+sw = ServingWorkload(
+    n_requests=300, arrival="bursty", rate_rps=60.0, burst_factor=4.0,
+    prompt=LengthDist("lognormal", median=64.0, sigma=0.6, cap=512),
+    output=LengthDist("lognormal", median=24.0, sigma=0.5, cap=96),
+    seed=42, slo=SLO(ttft_s=0.5, tpot_ms=5.0), max_batch=16)
+wl = sw.build()
 policies = [ContinuousBatching(16),
             ChunkedPrefill(16, token_budget=128),
             StaticBatching(16),
-            DisaggregatedPD(prefill_batch=2, decode_batch=16, transfer_s=0.002)]
+            DisaggregatedPD(prefill_batch=2, decode_batch=16,
+                            transfer_s=0.002)]
 
 print(f"{wl.n_requests} bursty requests, "
       f"{wl.prompt_tokens + wl.output_tokens} tokens, "
-      f"SLO: TTFT<={slo.ttft_s}s TPOT<={slo.tpot_ms}ms\n")
+      f"SLO: TTFT<={sw.slo.ttft_s}s TPOT<={sw.slo.tpot_ms}ms\n")
 print(f"{'policy':>14} {'wall_s':>7} {'ttft_p50':>9} {'ttft_p99':>9} "
       f"{'tpot_p50':>9} {'attain':>7} {'goodput':>8}")
 for pol in policies:
     t0 = time.perf_counter()
-    rep = ServingSimulator(sim, cfg, par=par, policy=pol).run(wl, slo=slo)
+    rep = ServingSimulator(sim, cfg, par=par, policy=pol).run(wl, slo=sw.slo)
     wall = time.perf_counter() - t0
     print(f"{pol.name:>14} {wall:7.2f} {rep.ttft_s.p50:9.4f} "
           f"{rep.ttft_s.p99:9.4f} {rep.tpot_ms.p50:9.3f} "
           f"{rep.slo_attainment:7.3f} {rep.goodput_rps:8.2f}")
 
-# ---- part 2: step-time vs goodput ranking in the explorer ---------------
-heavy = synthesize(240, rate_rps=2000.0,
-                   prompt=LengthDist("lognormal", median=64.0, sigma=0.5,
-                                     cap=256),
-                   output=LengthDist("fixed", value=24), seed=11)
-scen = ServingScenario(heavy, slo=SLO(ttft_s=0.05, tpot_ms=2.0))
-res = explore(sim, cfg, mode="decode", seq_len=512, chips=8,
-              tp_choices=(1, 2, 4), pp_choices=(1,),
-              batch_choices=(8, 32, 128), objective="goodput", scenario=scen)
+# (the one-spec path: ServingSimulator(sim).run(spec) prices the whole
+# trace with the policy/SLO carried by the spec itself)
+spec = SimSpec(cfg, cluster=Cluster("tpu_v5e"), parallel=par, workload=sw)
+rep = ServingSimulator(sim).run(spec)
+print(f"{'spec:' + sw.policy:>14} {'-':>7} {rep.ttft_s.p50:9.4f} "
+      f"{rep.ttft_s.p99:9.4f} {rep.tpot_ms.p50:9.3f} "
+      f"{rep.slo_attainment:7.3f} {rep.goodput_rps:8.2f}")
 
-print("\nexplorer ranking under each objective "
+# ---- part 2: step-time vs goodput ranking in the sweep ------------------
+heavy = ServingWorkload(
+    n_requests=240, rate_rps=2000.0,
+    prompt=LengthDist("lognormal", median=64.0, sigma=0.5, cap=256),
+    output=LengthDist("fixed", value=24), seed=11,
+    slo=SLO(ttft_s=0.05, tpot_ms=2.0))
+base = SimSpec(cfg, cluster=Cluster("tpu_v5e", chips=8),
+               workload=DecodeWorkload(seq_len=512))
+res = sweep(SweepSpace(base, {"tp": (1, 2, 4), "pp": (1,),
+                              "batch": (8, 32, 128)}),
+            sim=sim, objective="goodput", scenario=heavy)
+
+print("\nsweep ranking under each objective "
       "(tp/batch, step_us, system goodput rps):")
 for name in ("step_time", "goodput"):
     row = ["  %s:" % name.rjust(9)]

@@ -1,0 +1,45 @@
+"""Sweep axes the legacy ``explore()`` grid could not express.
+
+    PYTHONPATH=src python examples/sweep_whatif.py
+
+One declarative ``SweepSpace`` over seq_len x quantization x hardware:
+"should we serve 8k contexts on v5e in int8, or pay for H100s and keep
+bf16?" — a two-hardware what-if the old ``explore(tp_choices=...)``
+signature (hardwired to tp/pp/batch/micro on one simulator) had no words
+for.  Every axis is just a ``SimSpec`` field name.
+"""
+from repro.api import Cluster, DecodeWorkload, SimSpec, SweepSpace, sweep
+from repro.configs import get_config
+from repro.core import ParallelConfig, Simulator
+
+cfg = get_config("qwen2.5-32b")
+
+base = SimSpec(cfg, cluster=Cluster("tpu_v5e", chips=16),
+               parallel=ParallelConfig(tp=8),
+               workload=DecodeWorkload(global_batch=32))
+space = SweepSpace(base, {
+    "seq_len": (2048, 8192),
+    "quantize": (None, "int8"),
+    "hardware": ("tpu_v5e", "h100_sxm"),
+})
+
+print(f"sweeping {space.size()} specs over axes {space.axis_names} ...")
+res = sweep(space, sim=Simulator("tpu_v5e", engine="analytical"))
+print(f"evaluated {len(res.evaluated)} in {res.wall_time_s:.1f}s "
+      f"({res.configs_per_sec:.1f} configs/s, {res.n_groups} reuse groups)\n")
+
+print(f"{'hardware':>10} {'seq':>6} {'quant':>6} {'TPOT_ms':>8} "
+      f"{'TPS/chip':>9} {'KV GB':>6}")
+for r in res.ranked():
+    w, c = r.spec.workload, r.spec.cluster
+    print(f"{c.hardware:>10} {w.seq_len:>6} {w.quantize or 'bf16':>6} "
+          f"{r.report.step_time_us/1e3:8.2f} {r.tps_per_chip:9.2f} "
+          f"{r.report.memory.kv_cache/1e9:6.2f}")
+
+best = res.ranked()[0]
+print(f"\nfastest step: {best.spec.cluster.hardware} @ "
+      f"seq {best.spec.workload.seq_len}, "
+      f"{best.spec.workload.quantize or 'bf16'}; per-layer cache hit rates: "
+      + ", ".join(f"{k}={v['hits']}/{v['hits']+v['misses']}"
+                  for k, v in sorted(res.cache_stats.items())
+                  if isinstance(v, dict) and "hits" in v))

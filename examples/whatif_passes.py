@@ -1,35 +1,36 @@
 """What-if analyses via compiler-style passes (paper §5): evaluate operator
 fusion, int8 quantization, remat policy and the DualPipe schedule WITHOUT
-implementing them in a real compiler — just toggle passes and re-simulate.
+implementing them in a real compiler — each what-if is one field change on a
+frozen ``SimSpec`` (``spec_replace`` takes dotted spec paths), re-simulated.
 
     PYTHONPATH=src python examples/whatif_passes.py
 """
+from repro.api import Cluster, SimSpec, TrainWorkload, spec_replace
 from repro.configs import get_config
 from repro.core import ParallelConfig, Simulator
 
 cfg = get_config("yi-34b")
 sim = Simulator("tpu_v5e", engine="analytical")
-base_par = ParallelConfig(tp=16, dp=8, pp=2, sp=16, zero_stage=1, microbatches=8)
+base_par = ParallelConfig(tp=16, dp=8, pp=2, sp=16, zero_stage=1,
+                          microbatches=8)
 
-base = sim.simulate(cfg, mode="train", global_batch=256, seq_len=4096,
-                    par=base_par)
+base_spec = SimSpec(cfg, cluster=Cluster("tpu_v5e"), parallel=base_par,
+                    workload=TrainWorkload(global_batch=256, seq_len=4096))
+base = sim.run(base_spec)
 print(f"{'baseline':28s} {base.step_time_us/1e3:9.1f} ms  MFU {base.mfu:.3f}")
 
 whatifs = {
-    "+ operator fusion": dict(fusion=True),
-    "+ int8 matmul quant": dict(quantize="int8"),
-    "+ remat=dots (save matmuls)": dict(remat="dots"),
-    "+ no remat (memory perm.)": dict(remat="none"),
+    "+ operator fusion": {"workload.fusion": True},
+    "+ int8 matmul quant": {"workload.quantize": "int8"},
+    "+ remat=dots (save matmuls)": {"workload.remat": "dots"},
+    "+ no remat (memory perm.)": {"workload.remat": "none"},
 }
-for name, kw in whatifs.items():
-    r = sim.simulate(cfg, mode="train", global_batch=256, seq_len=4096,
-                     par=base_par, **kw)
+for name, changes in whatifs.items():
+    r = sim.run(spec_replace(base_spec, changes))
     print(f"{name:28s} {r.step_time_us/1e3:9.1f} ms  MFU {r.mfu:.3f}  "
           f"mem {r.memory.total/1e9:.0f} GB  "
           f"({base.step_time_us/r.step_time_us:.2f}x)")
 
-dual = ParallelConfig(tp=16, dp=8, pp=2, sp=16, zero_stage=1, microbatches=8,
-                      pp_schedule="dualpipe")
-r = sim.simulate(cfg, mode="train", global_batch=256, seq_len=4096, par=dual)
+r = sim.run(spec_replace(base_spec, {"parallel.pp_schedule": "dualpipe"}))
 print(f"{'+ DualPipe schedule':28s} {r.step_time_us/1e3:9.1f} ms  MFU {r.mfu:.3f}  "
       f"bubble {r.pp.bubble_fraction:.1%} vs {base.pp.bubble_fraction:.1%}")

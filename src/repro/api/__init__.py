@@ -1,0 +1,24 @@
+"""Typed spec API: one declarative surface for train, inference and serving.
+
+    from repro.api import (Cluster, DecodeWorkload, SimSpec, SweepSpace,
+                           TrainWorkload, sweep)
+
+    spec = SimSpec(model=cfg, cluster=Cluster("tpu_v5e"),
+                   parallel=ParallelConfig(tp=16, dp=16),
+                   workload=TrainWorkload(global_batch=256, seq_len=4096))
+    report = Simulator("tpu_v5e").run(spec)
+
+See ``docs/api.md`` for the full surface and the legacy-kwargs migration
+table.
+"""
+from repro.api.spec import (
+    STEP_WORKLOADS, CharonDeprecationWarning, Cluster, DecodeWorkload,
+    PrefillWorkload, ServingWorkload, SimSpec, TrainWorkload,
+)
+from repro.api.sweep import SweepSpace, spec_replace, sweep
+
+__all__ = [
+    "STEP_WORKLOADS", "CharonDeprecationWarning", "Cluster", "DecodeWorkload",
+    "PrefillWorkload", "ServingWorkload", "SimSpec", "TrainWorkload",
+    "SweepSpace", "spec_replace", "sweep",
+]

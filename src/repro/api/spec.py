@@ -1,0 +1,300 @@
+"""Declarative simulation specs — the single typed entry surface.
+
+Charon's headline claim is a *unified* simulator; this module is the unified
+*API*: one frozen, hashable :class:`SimSpec` describes any simulation —
+training, prefill, decode, or request-level serving — as
+
+    SimSpec(model, cluster, parallel, workload)
+
+* :class:`Cluster` — where it runs (hardware spec or registry name, chip
+  budget, pods, per-device memory limit),
+* :class:`ParallelConfig` (re-used from ``core.passes.base``) — how the model
+  is sharded,
+* a workload variant — what one step (or one request trace) looks like:
+  :class:`TrainWorkload` / :class:`PrefillWorkload` / :class:`DecodeWorkload`
+  for steady-state step simulation, :class:`ServingWorkload` for the
+  discrete-event request-level simulator.
+
+Every spec component is frozen and hashable, so a ``SimSpec`` *is* a cache
+key (the simulator's serving bucket and the sweep reuse-grouping key both use
+it directly) and any field can be a sweep axis (see ``repro.api.sweep``).
+
+Entry points: ``Simulator.run(spec) -> Report`` and
+``ServingSimulator.run(spec) -> ServingReport``.  The legacy kwargs surfaces
+(``Simulator.simulate(...)``, ``explore(sim, cfg, tp_choices=...)``) survive
+as thin shims that construct specs internally and emit
+:class:`CharonDeprecationWarning` — they are for external users only; CI
+escalates the warning to an error for intra-repo callers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import ClassVar
+
+from repro.configs.base import ModelConfig
+from repro.core.backend.hardware import HARDWARE, HardwareSpec, LinkDomain
+from repro.core.passes.base import ParallelConfig
+
+
+class CharonDeprecationWarning(DeprecationWarning):
+    """Emitted by the legacy kwargs shims.  Intra-repo code must use the
+    spec API; tests and benchmarks escalate this warning to an error."""
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Cluster:
+    """Where a simulation runs.
+
+    ``hardware`` accepts a registry name (``"tpu_v5e"``) or a
+    :class:`HardwareSpec` instance; instances are normalized to their name
+    for hashing/equality and kept for :meth:`resolve` (custom specs compare
+    by name).  ``chips`` is the total chip budget a sweep distributes over
+    data parallelism (0 = derived from the parallel config).  ``pods``
+    defaults the parallel config's pod count when that is left at 1.
+    ``memory_limit`` (bytes per device, 0 = unlimited) drives both the
+    closed-form memory-fit pre-pruning and the post-simulation filter in
+    sweeps.
+    """
+    hardware: str | HardwareSpec = "tpu_v5e"
+    chips: int = 0
+    pods: int = 1
+    memory_limit: float = 0.0
+    # derived: a custom HardwareSpec handed in via ``hardware``.  Kept as an
+    # init field so dataclasses.replace carries it through non-hardware
+    # changes (chips/pods/memory_limit on a custom cluster), but dropped the
+    # moment a replace renames ``hardware`` — a stale spec never survives.
+    _custom: HardwareSpec | None = field(default=None, repr=False,
+                                         compare=False)
+
+    def __post_init__(self):
+        if isinstance(self.hardware, HardwareSpec):
+            object.__setattr__(self, "_custom", self.hardware)
+            object.__setattr__(self, "hardware", self.hardware.name)
+        elif self._custom is not None and self._custom.name != self.hardware:
+            object.__setattr__(self, "_custom", None)
+        if self._custom is None and self.hardware not in HARDWARE:
+            raise KeyError(
+                f"unknown hardware {self.hardware!r}; registry has "
+                f"{sorted(HARDWARE)} (or pass a HardwareSpec instance)")
+
+    def resolve(self) -> HardwareSpec:
+        return self._custom or HARDWARE[self.hardware]
+
+
+# ---------------------------------------------------------------------------
+# Workload variants.  ``mode`` is a real (init=False) field so it survives
+# ``dataclasses.asdict`` round-trips and discriminates reconstruction.
+
+@dataclass(frozen=True)
+class _StepWorkload:
+    """Shared shape of one steady-state simulated step."""
+    global_batch: int = 8
+    seq_len: int = 2048
+    cache_len: int = 0              # 0 -> seq_len where a KV cache exists
+    fusion: bool = False
+    quantize: str | None = None     # None | "int8" | "f8" (QuantizePass)
+
+    def sim_kwargs(self) -> dict:
+        """The exact legacy ``Simulator.simulate`` kwargs this spec means —
+        the one translation point between the spec and kwargs surfaces."""
+        return dict(mode=self.mode, global_batch=self.global_batch,
+                    seq_len=self.seq_len, cache_len=self.cache_len,
+                    fusion=self.fusion, quantize=self.quantize,
+                    remat=getattr(self, "remat", "none"),
+                    optimizer=getattr(self, "optimizer", "adamw"))
+
+
+@dataclass(frozen=True)
+class TrainWorkload(_StepWorkload):
+    mode: str = field(default="train", init=False)
+    remat: str = "block"            # none | block | dots
+    optimizer: str = "adamw"        # adamw | adafactor
+
+
+@dataclass(frozen=True)
+class PrefillWorkload(_StepWorkload):
+    mode: str = field(default="prefill", init=False)
+
+
+@dataclass(frozen=True)
+class DecodeWorkload(_StepWorkload):
+    """One decode iteration: ``global_batch`` sequences at context
+    ``seq_len`` (``cache_len`` overrides the KV-cache depth)."""
+    mode: str = field(default="decode", init=False)
+
+
+def _default_prompt():
+    from repro.serving.sim.workload import LengthDist
+    return LengthDist("lognormal", median=512.0, sigma=0.7, cap=4096)
+
+
+def _default_output():
+    from repro.serving.sim.workload import LengthDist
+    return LengthDist("lognormal", median=128.0, sigma=0.7, cap=1024)
+
+
+def _default_slo():
+    from repro.serving.sim.report import SLO
+    return SLO()
+
+
+@dataclass(frozen=True)
+class ServingWorkload:
+    """A request-level trace spec for the discrete-event serving simulator.
+
+    Carries the arrival process, length distributions, SLO and batching
+    policy in frozen hashable form — the trace itself is synthesized
+    deterministically from ``seed`` by :meth:`build` (or replayed from
+    ``trace`` rows when given).  ``max_batch`` is the policy's admission
+    cap; in goodput sweeps the candidate's per-replica batch overrides it.
+    """
+    mode: str = field(default="serving", init=False)
+    n_requests: int = 200
+    arrival: str = "poisson"        # poisson | uniform | bursty
+    rate_rps: float = 8.0
+    burst_factor: float = 4.0
+    switch_prob: float = 0.1
+    prompt: object = field(default_factory=_default_prompt)    # LengthDist
+    output: object = field(default_factory=_default_output)    # LengthDist
+    seed: int = 0
+    trace: tuple = ()               # ((arrival_s, prompt, output), ...) rows
+    slo: object = field(default_factory=_default_slo)          # SLO
+    policy: str = "continuous"      # continuous | chunked | static
+    max_batch: int = 32
+    token_budget: int = 256         # chunked-prefill budget
+    ctx_floor: int = 256            # oracle context-bucket floor
+
+    def build(self):
+        """Materialize the deterministic request trace (a ``Workload``)."""
+        from repro.serving.sim.workload import Workload, synthesize
+        if self.trace:
+            return Workload.from_trace(self.trace)
+        return synthesize(self.n_requests, arrival=self.arrival,
+                          rate_rps=self.rate_rps,
+                          burst_factor=self.burst_factor,
+                          switch_prob=self.switch_prob, prompt=self.prompt,
+                          output=self.output, seed=self.seed)
+
+    def make_policy(self, max_batch: int | None = None):
+        from repro.serving.sim.policies import make_policy
+        return make_policy(self.policy, max_batch or self.max_batch,
+                           token_budget=self.token_budget)
+
+    def scenario(self):
+        """The explorer-facing view: a :class:`ServingScenario` whose
+        per-candidate admission cap is the candidate's replica batch."""
+        from repro.serving.sim.sim import ServingScenario
+        return ServingScenario(self.build(), slo=self.slo, policy=self.policy,
+                               token_budget=self.token_budget,
+                               ctx_floor=self.ctx_floor)
+
+
+STEP_WORKLOADS = {"train": TrainWorkload, "prefill": PrefillWorkload,
+                  "decode": DecodeWorkload}
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SimSpec:
+    """One fully-specified simulation.  Frozen and hashable: equal specs
+    mean bit-identical simulations, so a spec can serve as a cache key."""
+    model: ModelConfig
+    cluster: Cluster = Cluster()
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    workload: object = field(default_factory=TrainWorkload)
+
+    def __post_init__(self):
+        # a pods-bearing cluster defaults the parallel config's pod count
+        if self.cluster.pods > 1 and self.parallel.pods == 1:
+            object.__setattr__(self, "parallel", dataclasses.replace(
+                self.parallel, pods=self.cluster.pods))
+        elif self.cluster.pods > 1 and self.parallel.pods != self.cluster.pods:
+            raise ValueError(
+                f"cluster.pods={self.cluster.pods} conflicts with "
+                f"parallel.pods={self.parallel.pods}")
+
+    def __hash__(self):
+        # memoized: specs are cache keys on hot paths (the serving oracle
+        # probes the SimCache once per engine step) and every component is
+        # immutable by contract, so the nested hash is computed once
+        h = getattr(self, "_hash", None)
+        if h is None:
+            h = hash((self.model, self.cluster, self.parallel, self.workload))
+            object.__setattr__(self, "_hash", h)
+        return h
+
+    # ------------------------------------------------------------------
+    @property
+    def mode(self) -> str:
+        return self.workload.mode
+
+    def B_local(self) -> int:
+        """Per-replica batch after the data-parallel split."""
+        dp = max(self.parallel.dp * self.parallel.pods, 1)
+        return max(self.workload.global_batch // dp, 1)
+
+    def reuse_key(self) -> tuple:
+        """Specs with equal reuse keys share traced/transformed/priced block
+        graphs inside one simulator — the sweep sorts candidates by this key
+        so each group pays the expensive stages once (``shard_key`` leads so
+        legacy tp/pp/batch sweeps keep their historical evaluation order)."""
+        w = self.workload
+        seq = w.seq_len if w.mode != "decode" else 1
+        cache = w.cache_len or (w.seq_len if w.mode == "decode" else 0)
+        remat = getattr(w, "remat", "none") if w.mode == "train" else "none"
+        return (self.cluster.hardware, self.model.name, w.mode,
+                self.parallel.shard_key(), self.B_local(), seq, cache,
+                w.fusion, w.quantize or "", remat)
+
+    # ------------------------------------------------------------------
+    def asdict(self) -> dict:
+        """Nested plain-dict form (tuples preserved); inverse of
+        :meth:`from_dict`."""
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SimSpec":
+        cl = dict(d["cluster"])
+        custom = cl.pop("_custom", None)
+        if custom is not None:          # non-registry hardware: rebuild it
+            custom = dict(custom)
+            custom["intra"] = LinkDomain(**custom["intra"])
+            custom["inter"] = LinkDomain(**custom["inter"])
+            cl["hardware"] = HardwareSpec(**custom)
+        w = dict(d["workload"])
+        mode = w.pop("mode")
+        if mode == "serving":
+            from repro.serving.sim.report import SLO
+            from repro.serving.sim.workload import LengthDist
+            w["prompt"] = LengthDist(**w["prompt"])
+            w["output"] = LengthDist(**w["output"])
+            w["slo"] = SLO(**w["slo"])
+            workload = ServingWorkload(**w)
+        else:
+            workload = STEP_WORKLOADS[mode](**w)
+        return cls(model=ModelConfig(**d["model"]), cluster=Cluster(**cl),
+                   parallel=ParallelConfig(**d["parallel"]),
+                   workload=workload)
+
+    @staticmethod
+    def from_legacy(cfg: ModelConfig, hw, *, mode: str = "train",
+                    global_batch: int = 8, seq_len: int = 2048,
+                    par: ParallelConfig | None = None, remat: str = "block",
+                    optimizer: str = "adamw", fusion: bool = False,
+                    quantize: str | None = None,
+                    cache_len: int = 0) -> "SimSpec":
+        """Translate the legacy ``simulate()`` kwargs surface into a spec.
+
+        ``remat``/``optimizer`` only shape train workloads — for prefill and
+        decode the legacy simulator never consumed them (no RecomputePass,
+        no optimizer step), so dropping them preserves bit-identity.
+        """
+        kw = dict(global_batch=global_batch, seq_len=seq_len,
+                  cache_len=cache_len, fusion=fusion, quantize=quantize)
+        if mode == "train":
+            kw.update(remat=remat, optimizer=optimizer)
+        return SimSpec(model=cfg, cluster=Cluster(hw),
+                       parallel=par or ParallelConfig(),
+                       workload=STEP_WORKLOADS[mode](**kw))

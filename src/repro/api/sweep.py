@@ -1,0 +1,250 @@
+"""Declarative design-space sweeps over :class:`~repro.api.spec.SimSpec`.
+
+The legacy ``explore()`` hardcoded its grid to (tp, pp, batch, micro).  A
+:class:`SweepSpace` instead names *any* spec field as an axis — parallelism
+degrees, batch, sequence length, quantization, remat policy, even the
+hardware target — and :func:`sweep` enumerates the cross product, applies
+the same pruning rules, groups candidates by
+:meth:`~repro.api.spec.SimSpec.reuse_key` so the simulator's cache layers
+stay warm within a group, and ranks the survivors under the step-time or
+request-level goodput objective.  The result is the same
+:class:`~repro.core.explorer.ExplorationResult` the old surface returned,
+so Pareto/SLO/ranking queries are unchanged.
+
+Axis names are resolved against the spec components: use a dotted path
+(``"parallel.tp"``, ``"workload.seq_len"``, ``"cluster.hardware"``) or a
+bare field name, which is looked up in parallel -> workload -> cluster ->
+model order.  ``"batch"`` and ``"micro"`` alias ``workload.global_batch``
+and ``parallel.microbatches``.
+
+When ``cluster.chips`` is set and ``dp`` is not itself an axis, data
+parallelism is derived per candidate as ``chips // (tp*pp*pods*cp)`` and
+non-divisible combinations are skipped — the legacy enumeration rule.  For
+MoE models expert parallelism follows tp unless ``ep`` is an explicit axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterable
+
+from repro.api.spec import ServingWorkload, SimSpec
+from repro.core.backend.collectives import collective_memo_stats
+from repro.core.explorer import (
+    Candidate, DEFAULT_RULES, EvalResult, ExplorationResult, _stats_delta,
+    rule_memory_fit,
+)
+from repro.core.simulator import Simulator
+
+_ALIASES = {"batch": "workload.global_batch", "micro": "parallel.microbatches",
+            "hardware": "cluster.hardware", "hw": "cluster.hardware"}
+_COMPONENTS = ("parallel", "workload", "cluster", "model")
+
+
+def _resolve_axis(spec: SimSpec, name: str) -> tuple[str, str]:
+    """Axis name -> (component, field).  Dotted paths are explicit; bare
+    names search parallel -> workload -> cluster -> model."""
+    name = _ALIASES.get(name, name)
+    if "." in name:
+        comp, f = name.split(".", 1)
+        if comp not in _COMPONENTS:
+            raise KeyError(f"unknown spec component {comp!r} in axis {name!r}")
+        if f not in {x.name for x in dataclasses.fields(getattr(spec, comp))}:
+            raise KeyError(f"{type(getattr(spec, comp)).__name__} has no "
+                           f"field {f!r} (axis {name!r})")
+        return comp, f
+    for comp in _COMPONENTS:
+        obj = getattr(spec, comp)
+        if name in {x.name for x in dataclasses.fields(obj)}:
+            return comp, name
+    raise KeyError(f"axis {name!r} matches no field of any spec component")
+
+
+def spec_replace(spec: SimSpec, changes: dict) -> SimSpec:
+    """Rebuild a spec with dotted-path (or bare-name) field changes."""
+    per_comp: dict[str, dict] = {}
+    for name, value in changes.items():
+        comp, f = _resolve_axis(spec, name)
+        per_comp.setdefault(comp, {})[f] = value
+    parts = {comp: dataclasses.replace(getattr(spec, comp), **kw)
+             for comp, kw in per_comp.items()}
+    return dataclasses.replace(spec, **parts)
+
+
+@dataclass(frozen=True)
+class SweepSpace:
+    """A base spec plus named axes; hashable like every other spec object.
+
+    ``axes`` accepts a mapping ``{axis_name: values}`` (normalized to a
+    tuple of ``(name, tuple(values))`` pairs, preserving insertion order —
+    the cross product enumerates the last axis fastest).
+    """
+    base: SimSpec
+    axes: tuple = ()
+
+    def __post_init__(self):
+        ax = self.axes
+        pairs = ax.items() if isinstance(ax, dict) else ax
+        norm = []
+        for k, v in pairs:
+            if isinstance(v, (str, bytes)):
+                raise TypeError(
+                    f"axis {k!r}: values must be a sequence, got the bare "
+                    f"string {v!r} — wrap it in a tuple")
+            norm.append((str(k), tuple(v)))
+        norm = tuple(norm)
+        for k, _ in norm:
+            _resolve_axis(self.base, k)          # fail fast on bad names
+        object.__setattr__(self, "axes", norm)
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(k for k, _ in self.axes)
+
+    def size(self) -> int:
+        n = 1
+        for _, vals in self.axes:
+            n *= len(vals)
+        return n
+
+    def points(self) -> Iterable[SimSpec]:
+        """Enumerate candidate specs: cross product of the axes, then the
+        chip-budget dp derivation (and MoE ep) unless explicitly swept."""
+        names = self.axis_names
+        resolved = {n: _resolve_axis(self.base, n) for n in names}
+        derive_dp = ("parallel", "dp") not in resolved.values()
+        derive_ep = ("parallel", "ep") not in resolved.values()
+        for combo in itertools.product(*(v for _, v in self.axes)):
+            spec = spec_replace(self.base, dict(zip(names, combo)))
+            par, chips = spec.parallel, spec.cluster.chips
+            if chips:
+                denom = par.tp * par.pp * par.pods * par.cp
+                if derive_dp:
+                    if chips % denom:
+                        continue                  # budget not divisible
+                    par = dataclasses.replace(par, dp=chips // denom)
+                elif par.chips != chips:
+                    continue                      # explicit dp over budget
+            if derive_ep and spec.model.num_experts:
+                par = dataclasses.replace(par, ep=par.tp)
+            if par is not spec.parallel:
+                spec = dataclasses.replace(spec, parallel=par)
+            yield spec
+
+
+def _sim_for(cluster, sims: dict, engine: str) -> Simulator:
+    key = cluster.hardware
+    if key not in sims:
+        sims[key] = Simulator(cluster.resolve(), engine=engine)
+    return sims[key]
+
+
+def _merge_stats(deltas: list[dict]) -> dict:
+    """Sum per-simulator cache-stat deltas layer-wise.  The ``collectives``
+    layer is excluded here — its counters are process-global, so every
+    simulator reports the same window and summing would multi-count; the
+    caller patches in one global delta instead."""
+    out: dict[str, dict] = {}
+    for d in deltas:
+        for layer, st in d.items():
+            if layer == "collectives":
+                continue
+            acc = out.setdefault(layer, {"hits": 0, "misses": 0})
+            acc["hits"] += st.get("hits", 0)
+            acc["misses"] += st.get("misses", 0)
+    return out
+
+
+def sweep(space: SweepSpace, *, sim: Simulator | None = None,
+          engine: str = "analytical", rules: list[Callable] | None = None,
+          max_evals: int = 10_000, objective: str = "step_time",
+          scenario=None) -> ExplorationResult:
+    """Enumerate, prune, simulate and rank every spec in ``space``.
+
+    ``sim`` seeds the per-hardware simulator registry (its caches stay warm
+    across sweeps); hardware axes beyond it get fresh ``engine`` simulators.
+    Pruning uses the classic rules plus, when ``cluster.memory_limit`` is
+    set, the closed-form memory-fit lower bound before simulation and the
+    full memory report after.  ``objective="goodput"`` replays a
+    request-level scenario per candidate — pass a
+    :class:`~repro.serving.sim.ServingScenario`, a
+    :class:`~repro.api.spec.ServingWorkload`, or None for the default.
+    """
+    if objective not in ("step_time", "goodput"):
+        raise ValueError(f"unknown objective {objective!r}")
+    if isinstance(space.base.workload, ServingWorkload):
+        raise TypeError(
+            "sweep() needs a steady-state base workload (Train/Prefill/"
+            "Decode); pass the ServingWorkload as scenario= with "
+            "objective='goodput' instead")
+    rules = list(DEFAULT_RULES if rules is None else rules)
+    t0 = time.time()
+    coll0 = collective_memo_stats().as_dict()
+    pruned: list[EvalResult] = []
+    cands: list[tuple[SimSpec, Candidate]] = []
+    for spec in space.points():
+        cand = Candidate(spec.parallel, spec.workload.global_batch)
+        reason = next((r for rule in rules
+                       if (r := rule(spec.model, cand))), None)
+        if reason is None and spec.cluster.memory_limit:
+            w = spec.workload
+            fit = rule_memory_fit(spec.cluster.memory_limit, mode=w.mode,
+                                  seq_len=w.seq_len, cache_len=w.cache_len)
+            reason = fit(spec.model, cand)
+        if reason:
+            pruned.append(EvalResult(cand, None, pruned=True, reason=reason,
+                                     spec=spec))
+            continue
+        cands.append((spec, cand))
+
+    # evaluate group-by-group so every candidate after the first in a group
+    # hits the simulator's block-stage cache while it is warm
+    cands.sort(key=lambda sc: (sc[0].reuse_key(), sc[1].key()))
+    n_groups = len({s.reuse_key() for s, _ in cands})
+    sims: dict[str, Simulator] = {}
+    if sim is not None:
+        sims[sim.hw.name] = sim
+    stats0 = {k: s.cache_stats() for k, s in sims.items()}
+
+    evaluated: list[EvalResult] = []
+    for spec, cand in cands[:max_evals]:
+        s = _sim_for(spec.cluster, sims, engine)
+        # snapshot a lazily-created simulator's counters before its first
+        # run: the collectives memo is process-global, not zero at birth
+        if spec.cluster.hardware not in stats0:
+            stats0[spec.cluster.hardware] = s.cache_stats()
+        rep = s.run(spec)
+        res = EvalResult(cand, rep, spec=spec)
+        limit = spec.cluster.memory_limit
+        if limit and rep.memory and rep.memory.total > limit:
+            res.pruned = True
+            res.reason = f"memory {rep.memory.total/1e9:.1f}GB > limit"
+            pruned.append(res)
+            continue
+        evaluated.append(res)
+
+    if objective == "goodput":
+        # deferred import: repro.serving pulls the real-model serving stack,
+        # which the step-time-only path never needs
+        from repro.serving.sim import ServingScenario
+        if scenario is None:
+            scenario = ServingScenario.default()
+        elif isinstance(scenario, ServingWorkload):
+            scenario = scenario.scenario()
+        for res in evaluated:
+            s = _sim_for(res.spec.cluster, sims, engine)
+            res.serving = scenario.evaluate(s, res.spec.model, res.cand)
+
+    wall = time.time() - t0
+    deltas = [_stats_delta(s.cache_stats(), stats0.get(k, {}))
+              for k, s in sims.items()]
+    merged = _merge_stats(deltas)
+    coll1 = collective_memo_stats().as_dict()
+    merged["collectives"] = {k: coll1[k] - coll0[k]
+                             for k in ("hits", "misses")}
+    return ExplorationResult(
+        evaluated, pruned, wall, n_groups=n_groups,
+        configs_per_sec=(len(cands[:max_evals]) / wall) if wall > 0 else 0.0,
+        cache_stats=merged, objective=objective)

@@ -1,10 +1,14 @@
-"""Design-space exploration with rule-based pruning (paper §3.5, §5.2).
+"""Design-space exploration primitives and results (paper §3.5, §5.2).
 
-Enumerates (chips, tp, pp, dp, batch, microbatches, ...) configurations,
-prunes known-inefficient subspaces *before* simulating (user-extensible
-rules), simulates the rest, and reports the Pareto frontier over
-(system throughput TPS/chip vs user-facing TPS/user) plus best-under-SLO
-queries — the paper's Fig. 13 workflow.
+The enumeration itself lives in :mod:`repro.api.sweep`: a declarative
+:class:`~repro.api.sweep.SweepSpace` over :class:`~repro.api.spec.SimSpec`
+fields replaces the old hardcoded (tp, pp, batch, micro) grid, with
+:func:`explore` kept as a deprecation shim for external callers.  This
+module keeps the pieces both surfaces share: pruning rules
+(user-extensible), :class:`Candidate`/:class:`EvalResult`, and
+:class:`ExplorationResult` — the Pareto frontier over (system throughput
+TPS/chip vs user-facing TPS/user), best-under-SLO queries and
+step-time/goodput rankings of the paper's Fig. 13 workflow.
 
 Throughput is first-class: candidates are grouped by the sub-results they
 share (same tp/ep and per-shard batch ⇒ same traced, transformed and priced
@@ -15,9 +19,7 @@ benchmarks can track the sweep-throughput trajectory.
 """
 from __future__ import annotations
 
-import itertools
 import math
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterable
 
@@ -52,10 +54,12 @@ class EvalResult:
     report: Report
     pruned: bool = False
     reason: str = ""
-    # request-level result when explore(objective="goodput") ran a serving
-    # scenario for this candidate (per-replica workload share; see
+    # request-level result when the sweep ran a serving scenario for this
+    # candidate (per-replica workload share; see
     # repro.serving.sim.ServingScenario)
     serving: object | None = None
+    # the full SimSpec this candidate evaluated (set by repro.api.sweep)
+    spec: object | None = None
 
     @property
     def tps_per_chip(self) -> float:
@@ -169,7 +173,7 @@ class ExplorationResult:
         ``step_time`` ranks by steady-state per-step latency (the pre-PR-3
         behaviour); ``goodput`` ranks by system-level SLO-attainment
         throughput from the request-level serving simulation and requires
-        ``explore(..., objective="goodput")``.  The two orders genuinely
+        ``sweep(..., objective="goodput")``.  The two orders genuinely
         differ under load: small batches win on step time while starving
         admission capacity — see docs/serving.md for a documented scenario.
         """
@@ -177,7 +181,7 @@ class ExplorationResult:
         if objective == "goodput":
             if any(r.serving is None for r in self.evaluated):
                 raise ValueError(
-                    "goodput ranking needs explore(objective='goodput')")
+                    "goodput ranking needs sweep(objective='goodput')")
             return sorted(self.evaluated,
                           key=lambda r: (-r.goodput_rps,
                                          r.report.step_time_us))
@@ -204,68 +208,35 @@ def explore(sim: Simulator, cfg: ModelConfig, *, mode: str = "decode",
             memory_limit: float | None = None,
             max_evals: int = 10_000, objective: str = "step_time",
             scenario=None) -> ExplorationResult:
-    """Enumerate, prune, simulate and rank candidate configurations.
-
-    ``objective="step_time"`` (default) keeps the classic behaviour: every
-    candidate gets one steady-state ``simulate`` call.  ``"goodput"``
-    additionally replays a request-level serving scenario
-    (:class:`repro.serving.sim.ServingScenario`, default workload if
-    ``scenario`` is None) on every surviving candidate and ranks by system
-    SLO-attainment goodput via :meth:`ExplorationResult.ranked`.
+    """Deprecated kwargs shim for external callers: the hardcoded
+    (tp, pp, batch, micro) grid expressed as a declarative
+    :class:`~repro.api.sweep.SweepSpace` over :class:`~repro.api.spec.SimSpec`
+    fields — bit-identical candidates, pruning, grouping and rankings by
+    construction.  Intra-repo code calls :func:`repro.api.sweep.sweep`.
     """
-    if objective not in ("step_time", "goodput"):
-        raise ValueError(f"unknown objective {objective!r}")
-    rules = list(DEFAULT_RULES if rules is None else rules)
-    if memory_limit is not None:
-        # cheap closed-form pre-filter; the post-simulation check stays below
-        rules.append(rule_memory_fit(memory_limit, mode=mode, seq_len=seq_len))
-    t0 = time.time()
-    pruned: list[EvalResult] = []
-    cands: list[Candidate] = []
-    for tp, pp, gb, m in itertools.product(tp_choices, pp_choices,
-                                           batch_choices, micro_choices):
-        if chips % (tp * pp):
-            continue
-        dp = chips // (tp * pp)
-        par = ParallelConfig(tp=tp, pp=pp, dp=dp, microbatches=m,
-                             ep=tp if cfg.num_experts else 1)
-        cand = Candidate(par, gb)
-        reason = next((r for rule in rules if (r := rule(cfg, cand))), None)
-        if reason:
-            pruned.append(EvalResult(cand, None, pruned=True, reason=reason))
-            continue
-        cands.append(cand)
+    import warnings
 
-    # evaluate group-by-group so every candidate after the first in a group
-    # hits the simulator's block-stage cache while it is warm
-    cands.sort(key=lambda c: (c.reuse_key(), c.key()))
-    n_groups = len({c.reuse_key() for c in cands})
-    stats0 = sim.cache_stats()
-
-    evaluated: list[EvalResult] = []
-    for cand in cands[:max_evals]:
-        rep = sim.simulate(cfg, mode=mode, global_batch=cand.global_batch,
-                           seq_len=seq_len, par=cand.par,
-                           remat="none" if mode != "train" else "block")
-        res = EvalResult(cand, rep)
-        if memory_limit is not None and rep.memory and rep.memory.total > memory_limit:
-            res.pruned = True
-            res.reason = f"memory {rep.memory.total/1e9:.1f}GB > limit"
-            pruned.append(res)
-            continue
-        evaluated.append(res)
-
-    if objective == "goodput":
-        # deferred import: repro.serving pulls the real-model serving stack,
-        # which the step-time-only path never needs
-        from repro.serving.sim import ServingScenario
-        scenario = scenario or ServingScenario.default()
-        for res in evaluated:
-            res.serving = scenario.evaluate(sim, cfg, res.cand)
-
-    wall = time.time() - t0
-    return ExplorationResult(
-        evaluated, pruned, wall, n_groups=n_groups,
-        configs_per_sec=(len(cands[:max_evals]) / wall) if wall > 0 else 0.0,
-        cache_stats=_stats_delta(sim.cache_stats(), stats0),
-        objective=objective)
+    from repro.api.spec import (
+        Cluster, CharonDeprecationWarning, STEP_WORKLOADS, SimSpec,
+    )
+    from repro.api.sweep import SweepSpace, sweep
+    warnings.warn(
+        "explore(sim, cfg, tp_choices=...) is deprecated; build a "
+        "SweepSpace over SimSpec fields and call repro.api.sweep (see "
+        "docs/api.md)", CharonDeprecationWarning, stacklevel=2)
+    if memory_limit is not None and memory_limit <= 0:
+        # legacy 0.0 degenerately pruned everything; the spec surface uses
+        # 0 for "unlimited", so refuse the ambiguous value outright
+        raise ValueError("memory_limit must be positive; pass None (or "
+                         "omit) for no limit")
+    base = SimSpec(
+        model=cfg,
+        cluster=Cluster(sim.hw, chips=chips,
+                        memory_limit=memory_limit or 0.0),
+        workload=STEP_WORKLOADS[mode](seq_len=seq_len))
+    space = SweepSpace(base, {
+        "parallel.tp": tuple(tp_choices), "parallel.pp": tuple(pp_choices),
+        "workload.global_batch": tuple(batch_choices),
+        "parallel.microbatches": tuple(micro_choices)})
+    return sweep(space, sim=sim, rules=rules, max_evals=max_evals,
+                 objective=objective, scenario=scenario)

@@ -59,17 +59,42 @@ def graph_liveness_peak(g: Graph, *, record_timeline: bool = False):
     return peak, timeline
 
 
+def block_liveness(block_fwd: Graph, block_joint: Graph | None,
+                   mode: str) -> tuple[float, list, float]:
+    """The graph-walk stage of :func:`simulate_memory`: (peak live bytes,
+    liveness timeline, interior fwd activation bytes).
+
+    This is the only part of the memory report that touches the block graph
+    — everything else is closed-form arithmetic — so it is what the
+    simulator memoizes (SimCache ``memory`` bucket) across sweep candidates
+    that share a transformed first block.  Results are treated as immutable
+    by consumers (the timeline list may be shared between reports).
+    """
+    g = block_joint if (mode == "train" and block_joint is not None) \
+        else block_fwd
+    peak, timeline = graph_liveness_peak(g, record_timeline=True)
+    interior = block_fwd.total("bytes_out", phase="fwd")
+    return peak, timeline, interior
+
+
 def simulate_memory(block_fwd: Graph, *, n_layers: int, param_bytes: float,
                     boundary_bytes: float, mode: str = "train",
                     optimizer: str = "adamw", zero_stage: int = 0,
                     dp: int = 1, tp: int = 1, remat: str = "block",
                     kv_cache_bytes: float = 0.0,
-                    block_joint: Graph | None = None) -> MemoryReport:
+                    block_joint: Graph | None = None,
+                    liveness: tuple[float, list, float] | None = None
+                    ) -> MemoryReport:
     """Per-device peak memory for an n_layers stack of ``block_fwd``.
 
     ``param_bytes``: per-device parameter bytes (post TP/EP/FSDP sharding).
     ``boundary_bytes``: per-layer residual-stream activation saved for bwd.
+    ``liveness``: a precomputed (possibly cached) :func:`block_liveness`
+    result; when None the graphs are walked here.
     """
+    if liveness is None:
+        liveness = block_liveness(block_fwd, block_joint, mode)
+    peak_block, tl, interior = liveness
     r = MemoryReport()
     r.weights = param_bytes
     if mode == "train":
@@ -85,18 +110,14 @@ def simulate_memory(block_fwd: Graph, *, n_layers: int, param_bytes: float,
             opt /= max(dp, 1)
         r.opt_state = opt
         # live activations inside one block's fwd+bwd (peak during backward)
-        g = block_joint if block_joint is not None else block_fwd
-        peak_block, tl = graph_liveness_peak(g, record_timeline=True)
         r.timeline = tl
         if remat == "none":
             # every layer's interior activations are saved
-            interior = block_fwd.total("bytes_out", phase="fwd")
             r.saved_activations = interior * n_layers
         else:
             r.saved_activations = boundary_bytes * n_layers
         r.activations_peak = peak_block
     else:
-        peak_block, tl = graph_liveness_peak(block_fwd, record_timeline=True)
         r.timeline = tl
         r.activations_peak = peak_block
         r.kv_cache = kv_cache_bytes

@@ -12,9 +12,13 @@ from typing import Callable, Protocol
 from repro.core.ir import Graph
 
 
-@dataclass
+@dataclass(unsafe_hash=True)
 class ParallelConfig:
-    """Parallelism sizes the passes shard the graph by."""
+    """Parallelism sizes the passes shard the graph by.
+
+    Hashable (``unsafe_hash``) so a :class:`repro.api.spec.SimSpec` can be a
+    cache key; treat instances as frozen — build variants with
+    ``dataclasses.replace``."""
     tp: int = 1
     dp: int = 1
     pp: int = 1

@@ -13,10 +13,15 @@ relevant key.  ``SimCache`` holds the three sweep-level buckets:
 * ``block_times``  — the whole priced block stage (t_fwd / t_bwd / kind_us
                      plus the transformed first-block graphs the memory
                      analyzer needs), keyed on the union of the above
+* ``memory``       — the memory analyzer's block-graph liveness walk
+                     (``core.memory.block_liveness``), keyed like the block
+                     stage minus the engine version (liveness reads bytes,
+                     not prices)
 * ``serving``      — whole ``Report``s priced for the request-level serving
-                     simulator's step oracle, keyed on
-                     (model config, replica parallel key, mode,
-                     batch bucket, length bucket, cache bucket)
+                     simulator's step oracle, keyed directly on the
+                     bucketed :class:`repro.api.spec.SimSpec` (specs are
+                     frozen and hashable — the spec *is* the cache key)
+                     plus the engine state version
 
 Operator-pricing memoization lives on ``FusedEngine`` (see
 ``backend/engine.py``) but reports through the same ``CacheStats`` type so
@@ -56,7 +61,7 @@ class SimCache:
     property the bit-identical tests rely on.
     """
 
-    BUCKETS = ("ingest", "passes", "block_times", "serving")
+    BUCKETS = ("ingest", "passes", "block_times", "memory", "serving")
 
     def __init__(self, enabled: bool = True):
         self.enabled = enabled

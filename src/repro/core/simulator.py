@@ -23,7 +23,7 @@ from repro.core.backend.hardware import HARDWARE, HardwareSpec
 from repro.core.backend.prediction import PredictionEngine
 from repro.core.backend.profiling import ProfileDB, ProfilingEngine
 from repro.core.ir import Graph
-from repro.core.memory import MemoryReport, simulate_memory
+from repro.core.memory import MemoryReport, block_liveness, simulate_memory
 from repro.core.model_ingest import ModelGraphs, block_graphs, ingest_key
 from repro.core.overlap import apply_bandwidth_aware, apply_ratio_overlap
 from repro.core.passes.base import ParallelConfig, PassContext, PassManager
@@ -98,6 +98,7 @@ class _BlockStage:
     first_fwd: Graph                 # post-pass first decoder block (memory)
     first_joint: Graph | None
     timelines: dict
+    livekey: tuple = ()              # memory-liveness cache key (no engine ver)
 
 
 class Simulator:
@@ -228,7 +229,8 @@ class Simulator:
                 else:
                     t_bwd[bg.kind] = 0.0
             return _BlockStage(mg, t_fwd, t_bwd, kind_us,
-                               first_fwd, first_joint, timelines)
+                               first_fwd, first_joint, timelines,
+                               livekey=(ikey, pm_sig, shard))
 
         if keep_timelines:
             return build()
@@ -238,12 +240,49 @@ class Simulator:
         return self.cache.get("block_times", skey, build)
 
     # ------------------------------------------------------------------
+    def run(self, spec, *, keep_timelines: bool = False) -> Report:
+        """Simulate one :class:`repro.api.spec.SimSpec` — the primary entry
+        point.  The spec's cluster must name this simulator's hardware;
+        serving workloads belong to ``ServingSimulator.run``."""
+        if spec.cluster.hardware != self.hw.name:
+            raise ValueError(
+                f"simulator built for {self.hw.name!r} cannot run a spec for "
+                f"cluster hardware {spec.cluster.hardware!r}")
+        w = spec.workload
+        if getattr(w, "mode", None) == "serving":
+            raise TypeError("serving workloads are request-level: use "
+                            "ServingSimulator(sim).run(spec)")
+        return self._simulate(spec.model, par=spec.parallel,
+                              keep_timelines=keep_timelines, **w.sim_kwargs())
+
     def simulate(self, cfg: ModelConfig, *, mode: str = "train",
                  global_batch: int = 8, seq_len: int = 2048,
                  par: ParallelConfig | None = None, remat: str = "block",
                  optimizer: str = "adamw", fusion: bool = False,
                  quantize: str | None = None, cache_len: int = 0,
                  keep_timelines: bool = False) -> Report:
+        """Deprecated kwargs shim for external callers: builds the
+        equivalent :class:`~repro.api.spec.SimSpec` and delegates to
+        :meth:`run` (bit-identical by construction)."""
+        import warnings
+
+        from repro.api.spec import CharonDeprecationWarning, SimSpec
+        warnings.warn(
+            "Simulator.simulate(**kwargs) is deprecated; build a SimSpec "
+            "and call Simulator.run(spec) (see docs/api.md)",
+            CharonDeprecationWarning, stacklevel=2)
+        spec = SimSpec.from_legacy(
+            cfg, self.hw, mode=mode, global_batch=global_batch,
+            seq_len=seq_len, par=par, remat=remat, optimizer=optimizer,
+            fusion=fusion, quantize=quantize, cache_len=cache_len)
+        return self.run(spec, keep_timelines=keep_timelines)
+
+    def _simulate(self, cfg: ModelConfig, *, mode: str = "train",
+                  global_batch: int = 8, seq_len: int = 2048,
+                  par: ParallelConfig | None = None, remat: str = "block",
+                  optimizer: str = "adamw", fusion: bool = False,
+                  quantize: str | None = None, cache_len: int = 0,
+                  keep_timelines: bool = False) -> Report:
         par = par or ParallelConfig()
         dp_total = max(par.dp * par.pods, 1)
         B_local = max(global_batch // dp_total, 1)
@@ -326,15 +365,23 @@ class Simulator:
         # expert shard already inside the tp*pp approximation for MoE
         param_dev, kvb = shard_memory_floor(cfg, par, B_local, mode,
                                             cache_len or seq_len)
+        # the liveness walk re-reads only the transformed first block, so it
+        # is keyed like the block stage minus the engine version (pricing
+        # mutations cannot change activation bytes)
+        mem_mode = "train" if train else mode
+        block_joint = stage.first_joint if train else None
+        liveness = self.cache.get(
+            "memory", stage.livekey,
+            lambda: block_liveness(stage.first_fwd, block_joint, mem_mode))
         mem = simulate_memory(
             stage.first_fwd, n_layers=total_layers // pp,
             param_bytes=param_dev,
             boundary_bytes=B_local * (seq_len if mode != "decode" else 1)
             * cfg.d_model * 2 / max(par.sp, 1),
-            mode="train" if train else mode, optimizer=optimizer,
+            mode=mem_mode, optimizer=optimizer,
             zero_stage=par.zero_stage, dp=dp_total, tp=par.tp, remat=remat,
             kv_cache_bytes=kvb,
-            block_joint=stage.first_joint if train else None)
+            block_joint=block_joint, liveness=liveness)
 
         return Report(
             mode=mode, step_time_us=total, chips=chips,

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
 
+from repro.api.spec import Cluster, DecodeWorkload, PrefillWorkload, SimSpec
 from repro.configs.base import ModelConfig
 from repro.core.passes.base import ParallelConfig
 from repro.core.simulator import Simulator
@@ -44,17 +45,32 @@ class StepOracle:
 
     def __post_init__(self):
         self._par1 = replace(self.par, dp=1, pods=1, microbatches=1)
+        self._cluster = Cluster(self.sim.hw)
+        self._specs: dict[tuple, SimSpec] = {}
+
+    def _spec_for(self, mode: str, B: int, S: int, cache_len: int) -> SimSpec:
+        """Bucket tuple -> SimSpec, memoized: spec construction + the nested
+        hash are not free and this sits on the per-engine-step hot path."""
+        k = (mode, B, S, cache_len)
+        spec = self._specs.get(k)
+        if spec is None:
+            wcls = DecodeWorkload if mode == "decode" else PrefillWorkload
+            spec = SimSpec(self.cfg, cluster=self._cluster,
+                           parallel=self._par1,
+                           workload=wcls(global_batch=B, seq_len=S,
+                                         cache_len=cache_len))
+            self._specs[k] = spec
+        return spec
 
     # ------------------------------------------------------------------
     def _priced_s(self, mode: str, B: int, S: int, cache_len: int) -> float:
         self.lookups += 1
-        # engine state version: a profile-DB put or prediction retrain must
-        # not serve stale priced Reports (same invalidation as block_times)
-        key = (self.cfg, self._par1.key(), mode, B, S, cache_len,
-               self.sim.engine._state_version())
-        rep = self.sim.cache.get("serving", key, lambda: self.sim.simulate(
-            self.cfg, mode=mode, global_batch=B, seq_len=S, par=self._par1,
-            remat="none", cache_len=cache_len))
+        spec = self._spec_for(mode, B, S, cache_len)
+        # the bucketed spec IS the cache key; the engine state version rides
+        # along so a profile-DB put or prediction retrain can never serve a
+        # stale priced Report (same invalidation as block_times)
+        key = (spec, self.sim.engine._state_version())
+        rep = self.sim.cache.get("serving", key, lambda: self.sim.run(spec))
         return rep.step_time_us / 1e6
 
     def decode_step_s(self, batch: int, ctx: int) -> float:

@@ -159,3 +159,18 @@ class DisaggregatedPD:
     transfer_s: float = 0.002
 
     name = "disaggregated"
+
+
+def make_policy(name: str, max_batch: int, *, token_budget: int = 256):
+    """Name -> policy instance: the one registry shared by
+    :class:`~repro.api.spec.ServingWorkload` and
+    :class:`~repro.serving.sim.sim.ServingScenario` (policies that need
+    richer construction, e.g. :class:`DisaggregatedPD`, are passed as
+    objects instead of names)."""
+    if name == "continuous":
+        return ContinuousBatching(max_batch)
+    if name == "chunked":
+        return ChunkedPrefill(max_batch, token_budget=token_budget)
+    if name == "static":
+        return StaticBatching(max_batch)
+    raise ValueError(f"unknown serving policy {name!r}")

@@ -4,7 +4,7 @@
 ``Report``: instead of one steady-state step time it carries the TTFT/TPOT/
 end-to-end *distributions* a deployment decision actually hinges on, plus
 SLO-attainment goodput — the objective the explorer can rank parallelism
-configs by (``explore(..., objective="goodput")``).
+configs by (``sweep(..., objective="goodput")``).
 """
 from __future__ import annotations
 

@@ -33,8 +33,8 @@ from repro.core.simulator import Simulator
 from repro.serving.sim.events import ARRIVAL, STEP_DONE, EventQueue
 from repro.serving.sim.oracle import StepOracle
 from repro.serving.sim.policies import (
-    ChunkedPrefill, ContinuousBatching, DecodeOnly, DisaggregatedPD,
-    PrefillOnly, StaticBatching, StepPlan,
+    ContinuousBatching, DecodeOnly, DisaggregatedPD, PrefillOnly, StepPlan,
+    make_policy,
 )
 from repro.serving.sim.report import SLO, ServingReport
 from repro.serving.sim.workload import SimRequest, Workload, synthesize
@@ -61,14 +61,17 @@ class ServingSimulator:
     """Replay a :class:`Workload` through a batching policy, pricing every
     engine iteration with the step oracle."""
 
-    def __init__(self, sim: Simulator, cfg: ModelConfig, *,
+    def __init__(self, sim: Simulator, cfg: ModelConfig | None = None, *,
                  par: ParallelConfig | None = None, policy=None,
                  oracle: StepOracle | None = None, ctx_floor: int = 256):
+        self.sim = sim
         self.cfg = cfg
         self.par = par or ParallelConfig()
         self.policy = policy or ContinuousBatching()
-        self.oracle = oracle or StepOracle(sim, cfg, self.par,
-                                           ctx_floor=ctx_floor)
+        # spec-driven use (``ServingSimulator(sim).run(spec)``) defers the
+        # oracle until the spec supplies model/parallelism
+        self.oracle = oracle if cfg is None else (
+            oracle or StepOracle(sim, cfg, self.par, ctx_floor=ctx_floor))
 
     # ------------------------------------------------------------------
     def _pools(self) -> tuple[list[Pool], float]:
@@ -116,8 +119,36 @@ class ServingSimulator:
                 finished.append(r)
 
     # ------------------------------------------------------------------
-    def run(self, workload: Workload, *, slo: SLO | None = None,
+    def run(self, workload, *, slo: SLO | None = None,
             max_steps: int = 2_000_000) -> ServingReport:
+        """Replay a request trace and aggregate a :class:`ServingReport`.
+
+        Accepts either a legacy :class:`Workload` (with the policy/model
+        fixed at construction) or a :class:`~repro.api.spec.SimSpec` whose
+        workload is a :class:`~repro.api.spec.ServingWorkload` — the spec
+        then supplies the model, parallelism, policy, trace and SLO.
+        """
+        from repro.api.spec import SimSpec
+        if isinstance(workload, SimSpec):
+            spec = workload
+            w = spec.workload
+            if getattr(w, "mode", None) != "serving":
+                raise TypeError(
+                    "ServingSimulator.run(spec) needs a ServingWorkload; "
+                    f"got {type(w).__name__} (use Simulator.run for "
+                    "steady-state workloads)")
+            if spec.cluster.hardware != self.sim.hw.name:
+                raise ValueError(
+                    f"simulator built for {self.sim.hw.name!r} cannot run a "
+                    f"spec for cluster hardware {spec.cluster.hardware!r}")
+            inner = ServingSimulator(self.sim, spec.model, par=spec.parallel,
+                                     policy=w.make_policy(),
+                                     ctx_floor=w.ctx_floor)
+            return inner.run(w.build(), slo=slo if slo is not None else w.slo,
+                             max_steps=max_steps)
+        if self.oracle is None:
+            raise TypeError("ServingSimulator was built without a model "
+                            "config; pass a SimSpec to run()")
         reqs = sorted((r.reset_copy() for r in workload.requests),
                       key=lambda r: r.arrival_s)
         pools, transfer_s = self._pools()
@@ -207,13 +238,8 @@ class ServingScenario:
             200, arrival="poisson", rate_rps=16.0, seed=seed))
 
     def make_policy(self, max_batch: int):
-        if self.policy == "continuous":
-            return ContinuousBatching(max_batch)
-        if self.policy == "chunked":
-            return ChunkedPrefill(max_batch, token_budget=self.token_budget)
-        if self.policy == "static":
-            return StaticBatching(max_batch)
-        raise ValueError(f"unknown scenario policy {self.policy!r}")
+        return make_policy(self.policy, max_batch,
+                           token_budget=self.token_budget)
 
     def evaluate(self, sim: Simulator, cfg: ModelConfig, cand) -> ServingReport:
         replicas = max(cand.par.dp * cand.par.pods, 1)

@@ -1,0 +1,268 @@
+"""Spec-API invariants: the legacy kwargs shims are bit-identical to the
+spec path, specs are hashable round-trippable cache keys, and SweepSpace
+expresses (and correctly evaluates) axes the old ``explore()`` could not."""
+import dataclasses
+import warnings
+
+import pytest
+
+from repro.api import (
+    CharonDeprecationWarning, Cluster, DecodeWorkload, PrefillWorkload,
+    ServingWorkload, SimSpec, SweepSpace, TrainWorkload, spec_replace, sweep,
+)
+from repro.configs import get_config
+from repro.core import ParallelConfig, Simulator
+from repro.core.explorer import explore
+
+CFG = get_config("xlstm-125m")
+
+LEGACY_CASES = [
+    # (simulate kwargs, equivalent workload)
+    (dict(mode="train", global_batch=16, seq_len=512,
+          par=ParallelConfig(tp=2, dp=2, pp=2, microbatches=2),
+          remat="block", optimizer="adamw"),
+     TrainWorkload(global_batch=16, seq_len=512)),
+    (dict(mode="train", global_batch=16, seq_len=512,
+          par=ParallelConfig(tp=2, dp=4), remat="dots", fusion=True,
+          quantize="int8", optimizer="adafactor"),
+     TrainWorkload(global_batch=16, seq_len=512, remat="dots", fusion=True,
+                   quantize="int8", optimizer="adafactor")),
+    (dict(mode="prefill", global_batch=4, seq_len=512,
+          par=ParallelConfig(tp=2, dp=2), remat="none"),
+     PrefillWorkload(global_batch=4, seq_len=512)),
+    # remat/optimizer are inert outside training: the legacy defaults
+    # ("block"/"adamw") must map onto the same spec result
+    (dict(mode="prefill", global_batch=4, seq_len=256,
+          par=ParallelConfig(tp=2, dp=2)),
+     PrefillWorkload(global_batch=4, seq_len=256)),
+    (dict(mode="decode", global_batch=8, seq_len=1024,
+          par=ParallelConfig(tp=2, dp=4), remat="none"),
+     DecodeWorkload(global_batch=8, seq_len=1024)),
+    (dict(mode="decode", global_batch=8, seq_len=256, cache_len=2048,
+          par=ParallelConfig(tp=2, dp=4), remat="none"),
+     DecodeWorkload(global_batch=8, seq_len=256, cache_len=2048)),
+]
+
+
+def _bit_identical(a, b):
+    assert a.step_time_us == b.step_time_us
+    assert a.breakdown_us == b.breakdown_us
+    assert a.kind_us == b.kind_us
+    assert a.memory.total == b.memory.total
+    assert a.memory.summary() == b.memory.summary()
+    assert a.mfu == b.mfu
+    assert a.tokens_per_s == b.tokens_per_s
+
+
+@pytest.mark.parametrize("case", range(len(LEGACY_CASES)))
+def test_legacy_simulate_shim_bit_identical(case):
+    kw, workload = LEGACY_CASES[case]
+    kw = dict(kw)
+    par = kw.pop("par")
+    sim = Simulator("tpu_v5e", engine="analytical")
+    spec = SimSpec(CFG, parallel=par, workload=workload)
+    via_spec = sim.run(spec)
+    with pytest.warns(CharonDeprecationWarning):
+        via_legacy = sim.simulate(CFG, par=par, **kw)
+    _bit_identical(via_spec, via_legacy)
+    # and against a cold simulator, so the equality is not just cache reuse
+    cold = Simulator("tpu_v5e", engine="analytical", cache=False)
+    _bit_identical(cold.run(spec), via_spec)
+
+
+def _specs():
+    out = [SimSpec(CFG, parallel=par, workload=w)
+           for kw, w in LEGACY_CASES for par in [kw["par"]]]
+    out.append(SimSpec(CFG, cluster=Cluster("h100_sxm", chips=16, pods=2,
+                                            memory_limit=40e9),
+                       parallel=ParallelConfig(tp=2, dp=4),
+                       workload=DecodeWorkload(global_batch=32, seq_len=4096)))
+    out.append(SimSpec(CFG, parallel=ParallelConfig(tp=2),
+                       workload=ServingWorkload(n_requests=50, rate_rps=20.0,
+                                                arrival="bursty", seed=7)))
+    return out
+
+
+def test_spec_roundtrip_asdict_equal_hash():
+    for spec in _specs():
+        back = SimSpec.from_dict(spec.asdict())
+        assert back == spec
+        assert hash(back) == hash(spec)
+
+
+def test_spec_is_a_cache_key():
+    a, b = _specs()[0], _specs()[0]
+    assert a is not b
+    d = {a: "priced"}
+    assert d[b] == "priced"                      # equal specs collide
+    c = spec_replace(a, {"workload.global_batch": 999})
+    assert c not in d
+
+
+def test_cluster_normalizes_hardware_spec_and_pods():
+    from repro.core.backend.hardware import TPU_V5E
+    assert Cluster(TPU_V5E).hardware == "tpu_v5e"
+    assert Cluster(TPU_V5E) == Cluster("tpu_v5e")
+    assert Cluster(TPU_V5E).resolve() is TPU_V5E
+    with pytest.raises(KeyError):
+        Cluster("not_a_chip")
+    # cluster pods default the parallel pod count; conflicts raise
+    s = SimSpec(CFG, cluster=Cluster("tpu_v5e", pods=2),
+                parallel=ParallelConfig(tp=2, dp=2))
+    assert s.parallel.pods == 2
+    with pytest.raises(ValueError):
+        SimSpec(CFG, cluster=Cluster("tpu_v5e", pods=2),
+                parallel=ParallelConfig(tp=2, dp=2, pods=4))
+
+
+def test_cluster_replace_rederives_custom_hardware():
+    from dataclasses import replace
+
+    from repro.core.backend.hardware import TPU_V5E
+    custom = replace(TPU_V5E, name="my_chip")
+    c = Cluster(custom)
+    assert c.resolve() is custom
+    # non-hardware replace keeps the custom spec; renaming drops it
+    assert replace(c, chips=8).resolve() is custom
+    c2 = replace(c, hardware="h100_sxm")
+    assert c2.resolve().name == "h100_sxm"
+    with pytest.raises(KeyError):
+        replace(c, hardware="not_a_chip")
+    # and a custom-hardware spec round-trips through asdict/from_dict
+    spec = SimSpec(CFG, cluster=Cluster(custom), workload=DecodeWorkload())
+    back = SimSpec.from_dict(spec.asdict())
+    assert back == spec and back.cluster.resolve() == custom
+
+
+def test_sweep_rejects_serving_workload_base():
+    base = SimSpec(CFG, cluster=Cluster("tpu_v5e", chips=4),
+                   workload=ServingWorkload(n_requests=5))
+    with pytest.raises(TypeError):
+        sweep(SweepSpace(base, {"tp": (1, 2)}))
+
+
+def test_sweep_axis_typos_fail_fast():
+    base = SimSpec(CFG, workload=DecodeWorkload())
+    with pytest.raises(KeyError):
+        SweepSpace(base, {"workload.seq_length": (512,)})   # dotted typo
+    with pytest.raises(KeyError):
+        SweepSpace(base, {"seq_length": (512,)})            # bare typo
+    with pytest.raises(KeyError):
+        SweepSpace(base, {"engine.tp": (1,)})               # bad component
+    with pytest.raises(TypeError):
+        SweepSpace(base, {"hardware": "h100_sxm"})          # bare string
+    with pytest.raises(ValueError):
+        with pytest.warns(CharonDeprecationWarning):
+            explore(Simulator("tpu_v5e", engine="analytical"), CFG,
+                    chips=4, memory_limit=0.0)              # ambiguous limit
+
+
+def test_run_rejects_wrong_hardware_and_serving_workloads():
+    sim = Simulator("tpu_v5e", engine="analytical")
+    with pytest.raises(ValueError):
+        sim.run(SimSpec(CFG, cluster=Cluster("h100_sxm"),
+                        workload=DecodeWorkload()))
+    with pytest.raises(TypeError):
+        sim.run(SimSpec(CFG, workload=ServingWorkload(n_requests=5)))
+
+
+# ---------------- sweep equivalence ----------------
+
+GRID = dict(tp_choices=(1, 2, 4), pp_choices=(1, 2),
+            batch_choices=(8, 16, 100))
+
+
+def _space(memory_limit=0.0):
+    base = SimSpec(CFG, cluster=Cluster("tpu_v5e", chips=16,
+                                        memory_limit=memory_limit),
+                   workload=DecodeWorkload(seq_len=1024))
+    return SweepSpace(base, {"tp": GRID["tp_choices"],
+                             "pp": GRID["pp_choices"],
+                             "batch": GRID["batch_choices"]})
+
+
+def test_legacy_explore_shim_bit_identical_rankings():
+    with pytest.warns(CharonDeprecationWarning):
+        legacy = explore(Simulator("tpu_v5e", engine="analytical"), CFG,
+                         mode="decode", seq_len=1024, chips=16,
+                         memory_limit=16e9, **GRID)
+    new = sweep(_space(memory_limit=16e9),
+                sim=Simulator("tpu_v5e", engine="analytical"))
+    key = lambda res: [(r.cand.key(), r.report.step_time_us, r.tps_per_chip)
+                       for r in res.ranked()]
+    assert key(legacy) == key(new)
+    assert [(p.cand.key(), p.reason) for p in legacy.pruned] == \
+        [(p.cand.key(), p.reason) for p in new.pruned]
+    assert legacy.n_groups == new.n_groups
+    assert [(r.cand.key(),) for r in legacy.pareto()] == \
+        [(r.cand.key(),) for r in new.pareto()]
+    # reuse-grouping + cache layers behave identically under both surfaces
+    for layer in ("block_times", "pricing", "ingest"):
+        assert legacy.cache_stats[layer] == new.cache_stats[layer]
+    # every new-path result carries its full spec
+    assert all(r.spec is not None for r in new.evaluated)
+
+
+def test_sweep_axes_beyond_the_legacy_grid():
+    # seq_len x quantize x hardware in ONE space: inexpressible with
+    # explore(tp_choices=...) — the old surface hardcoded tp/pp/batch/micro
+    base = SimSpec(CFG, cluster=Cluster("tpu_v5e", chips=8),
+                   parallel=ParallelConfig(),
+                   workload=DecodeWorkload(global_batch=16))
+    space = SweepSpace(base, {"tp": (1, 2), "seq_len": (512, 2048),
+                              "quantize": (None, "int8"),
+                              "hardware": ("tpu_v5e", "h100_sxm")})
+    assert space.size() == 16
+    res = sweep(space)
+    assert len(res.evaluated) == 16
+    hw = {r.spec.cluster.hardware for r in res.evaluated}
+    assert hw == {"tpu_v5e", "h100_sxm"}
+    # quantization must matter: int8 beats bf16 step time on equal shapes
+    by = {(r.spec.cluster.hardware, r.spec.parallel.tp,
+           r.spec.workload.seq_len, r.spec.workload.quantize):
+          r.report.step_time_us for r in res.evaluated}
+    for h in ("tpu_v5e", "h100_sxm"):
+        assert by[(h, 2, 2048, "int8")] < by[(h, 2, 2048, None)]
+    # reuse grouping still reports: every distinct (hw, shapes) is a group
+    assert res.n_groups == 16
+    assert res.cache_stats["pricing"]["hits"] > 0
+
+
+def test_sweep_derives_dp_and_skips_nondivisible():
+    base = SimSpec(CFG, cluster=Cluster("tpu_v5e", chips=8),
+                   workload=DecodeWorkload(global_batch=8, seq_len=512))
+    res = sweep(SweepSpace(base, {"tp": (1, 2, 3)}))  # tp=3 !| 8 chips
+    tps = sorted(r.spec.parallel.tp for r in res.evaluated)
+    assert tps == [1, 2]
+    assert all(r.spec.parallel.chips == 8 for r in res.evaluated)
+
+
+def test_memory_liveness_memoized_across_candidates():
+    sim = Simulator("tpu_v5e", engine="analytical")
+    spec = SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=4),
+                   workload=DecodeWorkload(global_batch=8, seq_len=512))
+    r1 = sim.run(spec)
+    st = sim.cache_stats()["memory"]
+    assert st == {"hits": 0, "misses": 1, "hit_rate": 0.0}
+    # dp-only change shares the transformed first block -> liveness hit
+    r2 = sim.run(spec_replace(spec, {"parallel.dp": 8,
+                                     "workload.global_batch": 16}))
+    st = sim.cache_stats()["memory"]
+    assert st["hits"] == 1 and st["misses"] == 1
+    assert r1.memory.activations_peak == r2.memory.activations_peak
+
+
+def test_serving_spec_run_matches_legacy_construction():
+    from repro.serving.sim import ContinuousBatching, ServingSimulator
+    sim = Simulator("tpu_v5e", engine="analytical")
+    par = ParallelConfig(tp=2)
+    sw = ServingWorkload(n_requests=40, rate_rps=40.0, seed=3, max_batch=8,
+                         policy="continuous")
+    spec = SimSpec(CFG, parallel=par, workload=sw)
+    via_spec = ServingSimulator(sim).run(spec)
+    legacy = ServingSimulator(sim, CFG, par=par,
+                              policy=ContinuousBatching(8)).run(
+        sw.build(), slo=sw.slo)
+    a, b = via_spec.summary(), legacy.summary()
+    a.pop("oracle_stats"), b.pop("oracle_stats")  # hit/miss split differs
+    assert a == b

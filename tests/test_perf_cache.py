@@ -6,38 +6,52 @@ invisible in the numbers: cached and cold ``simulate()`` produce bit-identical
 path exactly, and repeated sweeps are deterministic."""
 import pytest
 
+from repro.api import (
+    Cluster, DecodeWorkload, PrefillWorkload, SimSpec, SweepSpace,
+    TrainWorkload, sweep,
+)
 from repro.configs import get_config
 from repro.core import ParallelConfig, Simulator
 from repro.core.backend.analytical import AnalyticalEngine
 from repro.core.backend.hardware import TPU_V5E
-from repro.core.explorer import Candidate, explore, rule_memory_fit
+from repro.core.explorer import Candidate, rule_memory_fit
 from repro.core.ir import Graph
 from repro.core.overlap import apply_ratio_overlap
 from repro.core.scheduler import schedule, schedule_times
 
 CFG = get_config("xlstm-125m")
 
+SPECS = [
+    SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=2, pp=2, microbatches=2),
+            workload=TrainWorkload(global_batch=16, seq_len=512)),
+    SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=2),
+            workload=PrefillWorkload(global_batch=4, seq_len=512)),
+    SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=4),
+            workload=DecodeWorkload(global_batch=8, seq_len=1024)),
+]
 
-def _reports(sim, cfg):
-    out = []
-    for mode, kw in [
-        ("train", dict(global_batch=16, seq_len=512,
-                       par=ParallelConfig(tp=2, dp=2, pp=2, microbatches=2))),
-        ("prefill", dict(global_batch=4, seq_len=512,
-                         par=ParallelConfig(tp=2, dp=2), remat="none")),
-        ("decode", dict(global_batch=8, seq_len=1024,
-                        par=ParallelConfig(tp=2, dp=4), remat="none")),
-    ]:
-        out.append(sim.simulate(cfg, mode=mode, **kw))
-    return out
+DEC_SPEC = SPECS[2]
+
+
+def _reports(sim, specs=SPECS):
+    return [sim.run(s) for s in specs]
+
+
+def _grid(seq_len=1024, chips=16, tp=(1, 2, 4), pp=(1, 2), batch=(8, 16, 32),
+          memory_limit=0.0):
+    base = SimSpec(CFG, cluster=Cluster("tpu_v5e", chips=chips,
+                                        memory_limit=memory_limit),
+                   workload=DecodeWorkload(seq_len=seq_len))
+    return SweepSpace(base, {"tp": tp, "pp": pp, "batch": batch})
 
 
 def test_cached_vs_cold_bit_identical_reports():
-    cold = _reports(Simulator("tpu_v5e", engine="analytical", cache=False), CFG)
+    cold = _reports(Simulator("tpu_v5e", engine="analytical", cache=False))
     sim = Simulator("tpu_v5e", engine="analytical", cache=True)
-    warm1 = _reports(sim, CFG)
-    warm2 = _reports(sim, CFG)   # second pass: everything served from cache
+    warm1 = _reports(sim)
+    warm2 = _reports(sim)   # second pass: everything served from cache
     assert sim.cache_stats()["block_times"]["hits"] >= 3
+    assert sim.cache_stats()["memory"]["hits"] >= 3
     for c, w1, w2 in zip(cold, warm1, warm2):
         for r in (w1, w2):
             assert r.step_time_us == c.step_time_us
@@ -50,10 +64,8 @@ def test_cached_vs_cold_bit_identical_reports():
 def test_fast_path_matches_interval_path():
     # keep_timelines=True forces the Interval-building path; both must agree
     sim = Simulator("tpu_v5e", engine="analytical")
-    kw = dict(mode="decode", global_batch=8, seq_len=1024,
-              par=ParallelConfig(tp=2, dp=4), remat="none")
-    fast = sim.simulate(CFG, **kw)
-    slow = sim.simulate(CFG, **kw, keep_timelines=True)
+    fast = sim.run(DEC_SPEC)
+    slow = sim.run(DEC_SPEC, keep_timelines=True)
     assert fast.step_time_us == pytest.approx(slow.step_time_us, rel=1e-12)
     assert fast.kind_us == pytest.approx(slow.kind_us, rel=1e-12)
     assert slow.block_timelines and not fast.block_timelines
@@ -88,9 +100,7 @@ def test_toposort_cache_invalidation():
 
 def test_explore_pricing_cache_hit_rate_and_stats():
     sim = Simulator("tpu_v5e", engine="analytical")
-    res = explore(sim, CFG, mode="decode", seq_len=1024, chips=16,
-                  tp_choices=(1, 2, 4), pp_choices=(1, 2),
-                  batch_choices=(8, 16, 32))
+    res = sweep(_grid(), sim=sim)
     assert res.evaluated and res.configs_per_sec > 0 and res.n_groups > 0
     pr = res.cache_stats["pricing"]
     assert pr["hits"] > 0
@@ -103,9 +113,7 @@ def test_explore_pricing_cache_hit_rate_and_stats():
 def test_explore_deterministic_pareto():
     def frontier():
         sim = Simulator("tpu_v5e", engine="analytical")
-        res = explore(sim, CFG, mode="decode", seq_len=1024, chips=16,
-                      tp_choices=(1, 2, 4), pp_choices=(1, 2),
-                      batch_choices=(8, 16, 32))
+        res = sweep(_grid(), sim=sim)
         return [(r.cand.key(), r.report.step_time_us, r.tps_per_chip)
                 for r in res.pareto()]
     f1, f2 = frontier(), frontier()
@@ -113,10 +121,8 @@ def test_explore_deterministic_pareto():
 
     # a warm simulator must reproduce its own cold frontier too
     sim = Simulator("tpu_v5e", engine="analytical")
-    kw = dict(mode="decode", seq_len=1024, chips=16, tp_choices=(1, 2, 4),
-              pp_choices=(1, 2), batch_choices=(8, 16, 32))
-    r1 = explore(sim, CFG, **kw)
-    r2 = explore(sim, CFG, **kw)
+    r1 = sweep(_grid(), sim=sim)
+    r2 = sweep(_grid(), sim=sim)
     key = lambda res: [(r.cand.key(), r.report.step_time_us) for r in res.pareto()]
     assert key(r1) == key(r2)
 
@@ -130,9 +136,8 @@ def test_rule_memory_fit_prunes_before_simulation():
 
     # in a sweep, infeasible candidates are pruned without being simulated
     sim = Simulator("tpu_v5e", engine="analytical")
-    res = explore(sim, CFG, mode="decode", seq_len=1024, chips=16,
-                  tp_choices=(1, 2), pp_choices=(1,), batch_choices=(8, 16),
-                  memory_limit=1e6)
+    res = sweep(_grid(tp=(1, 2), pp=(1,), batch=(8, 16), memory_limit=1e6),
+                sim=sim)
     assert not res.evaluated
     assert all(p.report is None and "memory-fit" in p.reason
                for p in res.pruned)
@@ -144,8 +149,9 @@ def test_memory_fit_estimate_is_lower_bound():
     sim = Simulator("tpu_v5e", engine="analytical")
     for tp, gb in [(1, 8), (2, 16), (4, 32)]:
         par = ParallelConfig(tp=tp, dp=16 // tp)
-        rep = sim.simulate(CFG, mode="decode", global_batch=gb, seq_len=1024,
-                           par=par, remat="none")
+        rep = sim.run(SimSpec(CFG, parallel=par,
+                              workload=DecodeWorkload(global_batch=gb,
+                                                      seq_len=1024)))
         limit = rep.memory.total
         rule = rule_memory_fit(limit, mode="decode", seq_len=1024)
         assert rule(CFG, Candidate(par, gb)) is None
@@ -174,11 +180,11 @@ def test_block_stage_cache_invalidated_on_profile_db_mutation():
 
     db = ProfileDB(path="/nonexistent/empty.json")
     sim = Simulator("tpu_v5e", engine="profiling", db=db)
-    kw = dict(mode="decode", global_batch=8, seq_len=512,
-              par=ParallelConfig(tp=2, dp=4), remat="none")
-    r1 = sim.simulate(CFG, **kw)
+    spec = SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=4),
+                   workload=DecodeWorkload(global_batch=8, seq_len=512))
+    r1 = sim.run(spec)
     db.put("tpu_v5e|matmul|1,1,1|bf16", 1.0, {})   # any external put
-    r2 = sim.simulate(CFG, **kw)
+    r2 = sim.run(spec)
     # that key matches no node, so results are equal — but they must have
     # been recomputed, not served from a stale stage (block_times missed)
     assert r2.step_time_us == r1.step_time_us
@@ -216,10 +222,10 @@ def test_collective_time_memoized_and_self_invalidating():
 def test_simulate_exposes_collective_memo_stats():
     sim = Simulator("tpu_v5e", engine="analytical")
     sim.cache_clear()
-    sim.simulate(CFG, mode="decode", global_batch=8, seq_len=512,
-                 par=ParallelConfig(tp=2, dp=4), remat="none")
-    sim.simulate(CFG, mode="decode", global_batch=8, seq_len=512,
-                 par=ParallelConfig(tp=2, dp=4), remat="none")
+    spec = SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=4),
+                   workload=DecodeWorkload(global_batch=8, seq_len=512))
+    sim.run(spec)
+    sim.run(spec)
     st = sim.cache_stats()["collectives"]
     assert st["hits"] > 0                        # repeat p2p terms memoized
 
@@ -228,6 +234,6 @@ def test_simulate_does_not_mutate_caller_parallel_config():
     sim = Simulator("tpu_v5e", engine="analytical")
     par = ParallelConfig(tp=2, dp=2)
     snapshot = par.key()
-    sim.simulate(CFG, mode="decode", global_batch=8, seq_len=512, par=par,
-                 remat="none")
+    sim.run(SimSpec(CFG, parallel=par,
+                    workload=DecodeWorkload(global_batch=8, seq_len=512)))
     assert par.key() == snapshot

@@ -3,12 +3,13 @@ invariants under every batching policy, oracle memoization, and the
 goodput-vs-step-time objective divergence in the explorer."""
 import pytest
 
+from repro.api import Cluster, DecodeWorkload, ServingWorkload, SimSpec, \
+    SweepSpace, sweep
 from repro.configs import get_config
 from repro.core import ParallelConfig, Simulator
-from repro.core.explorer import explore
 from repro.serving.sim import (
     SLO, ChunkedPrefill, ContinuousBatching, DisaggregatedPD, LengthDist,
-    Pool, ServingScenario, ServingSimulator, StaticBatching, Workload,
+    Pool, ServingSimulator, StaticBatching, Workload,
     pow2_bucket, synthesize,
 )
 from repro.serving.sim.workload import SimRequest
@@ -196,14 +197,16 @@ def test_oracle_invalidated_on_engine_state_mutation():
 def test_goodput_ranking_diverges_from_step_time(sim):
     # under heavy load small batches win on step time but starve admission;
     # the documented scenario in docs/serving.md
-    wl = synthesize(160, rate_rps=2000.0,
-                    prompt=LengthDist("lognormal", median=64.0, sigma=0.5,
-                                      cap=256),
-                    output=LengthDist("fixed", value=24), seed=11)
-    scen = ServingScenario(wl, slo=SLO(ttft_s=0.05, tpot_ms=2.0))
-    res = explore(sim, CFG, mode="decode", seq_len=512, chips=8,
-                  tp_choices=(1, 2), pp_choices=(1,),
-                  batch_choices=(8, 32), objective="goodput", scenario=scen)
+    scen = ServingWorkload(
+        n_requests=160, rate_rps=2000.0,
+        prompt=LengthDist("lognormal", median=64.0, sigma=0.5, cap=256),
+        output=LengthDist("fixed", value=24), seed=11,
+        slo=SLO(ttft_s=0.05, tpot_ms=2.0))
+    base = SimSpec(CFG, cluster=Cluster("tpu_v5e", chips=8),
+                   workload=DecodeWorkload(seq_len=512))
+    res = sweep(SweepSpace(base, {"tp": (1, 2), "pp": (1,),
+                                  "batch": (8, 32)}),
+                sim=sim, objective="goodput", scenario=scen)
     assert res.evaluated and all(r.serving is not None for r in res.evaluated)
     by_step = res.ranked("step_time")
     by_goodput = res.ranked("goodput")
@@ -215,10 +218,12 @@ def test_goodput_ranking_diverges_from_step_time(sim):
 
 
 def test_step_time_objective_requires_no_serving(sim):
-    res = explore(sim, CFG, mode="decode", seq_len=512, chips=4,
-                  tp_choices=(1, 2), pp_choices=(1,), batch_choices=(8,))
+    base = SimSpec(CFG, cluster=Cluster("tpu_v5e", chips=4),
+                   workload=DecodeWorkload(seq_len=512))
+    space = SweepSpace(base, {"tp": (1, 2), "pp": (1,), "batch": (8,)})
+    res = sweep(space, sim=sim)
     assert res.ranked("step_time")
     with pytest.raises(ValueError):
         res.ranked("goodput")
     with pytest.raises(ValueError):
-        explore(sim, CFG, mode="decode", chips=4, objective="nonsense")
+        sweep(space, sim=sim, objective="nonsense")

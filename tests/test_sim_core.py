@@ -7,6 +7,10 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.api import (
+    Cluster, DecodeWorkload, SimSpec, SweepSpace, TrainWorkload,
+    spec_replace, sweep,
+)
 from repro.configs import get_config
 from repro.core import ParallelConfig, Simulator
 from repro.core.backend.analytical import AnalyticalEngine
@@ -176,11 +180,13 @@ def test_simulator_sane_mfu_and_scaling():
     sim = Simulator("tpu_v5e", engine="analytical")
     cfg = get_config("gemma-7b")
     par = ParallelConfig(tp=16, dp=16, sp=16, zero_stage=1)
-    r = sim.simulate(cfg, mode="train", global_batch=256, seq_len=4096, par=par)
+    spec = SimSpec(cfg, parallel=par,
+                   workload=TrainWorkload(global_batch=256, seq_len=4096))
+    r = sim.run(spec)
     assert 0.02 < r.mfu < 1.0
     assert r.memory.total > 0
     # doubling batch should not reduce tokens/s
-    r2 = sim.simulate(cfg, mode="train", global_batch=512, seq_len=4096, par=par)
+    r2 = sim.run(spec_replace(spec, {"workload.global_batch": 512}))
     assert r2.tokens_per_s >= r.tokens_per_s * 0.95
 
 
@@ -188,20 +194,20 @@ def test_simulator_decode_batch_throughput_monotone():
     sim = Simulator("tpu_v5e", engine="analytical")
     cfg = get_config("gemma-7b")
     par = ParallelConfig(tp=16, dp=16)
-    t8 = sim.simulate(cfg, mode="decode", global_batch=16, seq_len=8192,
-                      par=par, remat="none")
-    t64 = sim.simulate(cfg, mode="decode", global_batch=64, seq_len=8192,
-                       par=par, remat="none")
+    spec = SimSpec(cfg, parallel=par,
+                   workload=DecodeWorkload(global_batch=16, seq_len=8192))
+    t8 = sim.run(spec)
+    t64 = sim.run(spec_replace(spec, {"workload.global_batch": 64}))
     assert t64.tps_per_chip > t8.tps_per_chip  # weights amortise over batch
 
 
 def test_explorer_pruning_and_pareto():
-    from repro.core.explorer import explore
     sim = Simulator("tpu_v5e", engine="analytical")
     cfg = get_config("xlstm-125m")
-    res = explore(sim, cfg, mode="decode", seq_len=2048, chips=16,
-                  tp_choices=(1, 2, 4), pp_choices=(1,),
-                  batch_choices=(8, 16, 100), micro_choices=(1,))
+    base = SimSpec(cfg, cluster=Cluster("tpu_v5e", chips=16),
+                   workload=DecodeWorkload(seq_len=2048))
+    res = sweep(SweepSpace(base, {"tp": (1, 2, 4), "pp": (1,),
+                                  "batch": (8, 16, 100)}), sim=sim)
     assert res.pruned, "divisibility rule should prune batch=100 w/ dp"
     front = res.pareto()
     xs = [1e6 / r.report.step_time_us for r in front]
