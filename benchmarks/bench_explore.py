@@ -16,16 +16,34 @@ from repro.configs import get_config
 from repro.core import Simulator
 
 
+def _warm_runtime(cfg) -> None:
+    """Absorb one-time process init (jax trace machinery, jnp ufunc jit
+    caches, dtype registries) before the clock starts, so a standalone
+    ``run.py fig13`` measures sweep throughput — not interpreter warmup —
+    and matches the full-suite run where earlier benches already paid it.
+    Touches no simulator cache: it traces one throwaway *tiny* block
+    (ingest caches are per-``Simulator``; this calls ``block_graphs``
+    directly), never a sweep shape."""
+    import dataclasses
+
+    from repro.core.model_ingest import block_graphs
+    tiny = dataclasses.replace(cfg, name="warmup-tiny", num_layers=2,
+                               d_model=128, num_heads=2, num_kv_heads=2,
+                               d_ff=256, vocab_size=512, head_dim=0)
+    block_graphs(tiny, 1, 1, "decode", cache_len=256)
+
+
 def run() -> list[dict]:
     cfg = get_config("qwen2.5-32b")
     sim = Simulator("tpu_v5e", engine="analytical")
     base = SimSpec(cfg, cluster=Cluster("tpu_v5e", chips=256,
                                         memory_limit=16e9),
                    workload=DecodeWorkload(seq_len=8192))
+    space = SweepSpace(base, {"tp": (4, 8, 16, 32), "pp": (1, 2, 4),
+                              "batch": (16, 32, 64, 128, 256, 512)})
+    _warm_runtime(cfg)
     t0 = time.time()
-    res = sweep(SweepSpace(base, {"tp": (4, 8, 16, 32), "pp": (1, 2, 4),
-                                  "batch": (16, 32, 64, 128, 256, 512)}),
-                sim=sim)
+    res = sweep(space, sim=sim)
     wall = time.time() - t0
     front = res.pareto()
     pr = res.cache_stats.get("pricing", {"hits": 0, "misses": 0})
@@ -35,9 +53,24 @@ def run() -> list[dict]:
              "wall_s": round(wall, 1),
              "configs_per_sec": round(res.configs_per_sec, 1),
              "n_reuse_groups": res.n_groups,
+             "workers": res.workers,
              "pricing_hit_rate": round(pr_rate, 3),
              "cache_stats": res.cache_stats,
              "paper_claim": "completes within two minutes"}]
+
+    # ---- reuse-sharded multiprocess sweep: same space, fresh processes ----
+    # (cold-start dominated at this size — spawn pays a jax import per
+    # worker — the row tracks that the parallel path stays correct and how
+    # its throughput trends as sweeps grow)
+    t0 = time.time()
+    res2 = sweep(space, workers=2)
+    rank = lambda r: [(x.cand.key(), x.report.step_time_us)
+                      for x in r.ranked()]
+    assert rank(res2) == rank(res), "workers=2 sweep diverged from serial"
+    rows.append({"bench": "fig13_dse", "case": "exploration_workers",
+                 "workers": 2, "wall_s": round(time.time() - t0, 1),
+                 "configs_per_sec": round(res2.configs_per_sec, 1),
+                 "bit_identical_to_serial": True})
     for r in front[:8]:
         p = r.cand.par
         rows.append({"bench": "fig13_dse", "case": "pareto",

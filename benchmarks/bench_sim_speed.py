@@ -7,15 +7,24 @@ reports >30,000x cost reduction for large-scale experiments.
 This bench also tracks simulation *throughput* as a first-class metric:
 ``configs_per_sec`` for warm (cache-served) re-evaluations plus per-layer
 cache hit rates, so ``BENCH_*.json`` records the perf trajectory of the
-memoization stack (docs/performance.md).
+memoization stack (docs/performance.md).  Since PR 5 it additionally
+exercises the persistent cross-run tier: a cold run populates an on-disk
+cache, a fresh ``Simulator`` warm-starts from it, and the recorded
+``ingest_hit_rate`` is that warm-from-disk run's rate — a *new* spec sharing
+traced shapes skips JAX tracing entirely, and an exact repeat is served
+whole from the ``reports`` tier.
 """
 from __future__ import annotations
 
+import dataclasses
+import shutil
+import tempfile
 import time
 
 from repro.api import Cluster, SimSpec, TrainWorkload
 from repro.configs import get_config
 from repro.core import ParallelConfig, Simulator
+from repro.core.model_ingest import ingest_extrapolation_clear
 
 # conservative profiling-run cost model (paper §2.2: cold launches + warmups
 # consume hundreds of GPU hours per design point at cluster scale)
@@ -34,6 +43,9 @@ def run() -> list[dict]:
     t0 = time.time()
     n = 6
     for i in range(n):
+        # each rep must cost what a genuinely NEW design point costs: clear
+        # the module-level batch-extrapolation memo so repeats re-trace
+        ingest_extrapolation_clear()
         sim.run(spec)
     sim_s = (time.time() - t0) / n
     cluster_chip_seconds = PROFILE_MINUTES_PER_POINT * 60 * CHIPS
@@ -46,8 +58,9 @@ def run() -> list[dict]:
         "paper_claim": ">30,000x cost reduction vs cluster profiling",
     }]
 
-    # ---- cold vs warm: what the memoization stack buys per re-evaluation ----
+    # ---- cold vs warm: what the in-process memoization stack buys ----
     warm_sim = Simulator("tpu_v5e", engine="analytical", cache=True)
+    ingest_extrapolation_clear()     # a true cold first call (re-traces)
     t0 = time.time()
     warm_sim.run(spec)
     cold_s = time.time() - t0        # first call on a fresh cache
@@ -57,6 +70,34 @@ def run() -> list[dict]:
         warm_sim.run(spec)
     warm_s = (time.time() - t0) / n_warm
     stats = warm_sim.cache_stats()
+
+    # ---- persistent tier: a fresh process-equivalent warm-starts from disk
+    # (fresh Simulator + SimCache; the pickle file is the only reuse channel)
+    cache_dir = tempfile.mkdtemp(prefix="charon-cache-")
+    try:
+        seed = Simulator("tpu_v5e", engine="analytical", persist=cache_dir)
+        seed.run(spec)
+        seed.save_cache()
+        # fresh-process equivalence: the pickle must be the only warm
+        # channel, so drop the in-process extrapolation memo too
+        ingest_extrapolation_clear()
+        disk_sim = Simulator("tpu_v5e", engine="analytical",
+                             persist=cache_dir)
+        t0 = time.time()
+        rep_repeat = disk_sim.run(spec)          # exact repeat: reports tier
+        disk_first_s = time.time() - t0
+        # a *changed* sweep point sharing traced shapes: new shard key means
+        # passes/pricing rerun, but the persisted ingest entry skips tracing
+        variant = dataclasses.replace(
+            spec, parallel=dataclasses.replace(par, tp=8, sp=8))
+        t0 = time.time()
+        rep_variant = disk_sim.run(variant)
+        disk_variant_s = time.time() - t0
+        dstats = disk_sim.cache_stats()
+        assert rep_repeat.step_time_us == seed.run(spec).step_time_us
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
     rows.append({
         "bench": "fig1_sim_cost", "case": "cache_warm_vs_cold",
         "cold_seconds": round(cold_s, 3),
@@ -65,7 +106,14 @@ def run() -> list[dict]:
         "speedup_x": round(cold_s / warm_s, 1) if warm_s else 0.0,
         "pricing_hit_rate": stats["pricing"]["hit_rate"],
         "block_stage_hit_rate": stats["block_times"]["hit_rate"],
-        "ingest_hit_rate": stats["ingest"]["hit_rate"],
+        # warm-from-disk rate (a cold run can only ever report 0.0 here:
+        # its single ingest miss is the trace that fills the cache)
+        "ingest_hit_rate": dstats["ingest"]["hit_rate"],
         "memory_hit_rate": stats["memory"]["hit_rate"],
+        "persistent_first_call_s": round(disk_first_s, 4),
+        "persistent_variant_call_s": round(disk_variant_s, 4),
+        "persistent_report_hits": dstats["reports"]["hits"],
+        "persistent_ingest_hit_rate": dstats["ingest"]["hit_rate"],
+        "mfu_checksum": rep_variant.mfu,
     })
     return rows

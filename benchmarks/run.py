@@ -45,14 +45,24 @@ def _perf_summary(rows: list[dict]) -> dict:
         if bench == "fig1_sim_cost" and case == "cache_warm_vs_cold":
             out["warm_configs_per_sec"] = r.get("configs_per_sec")
             out["cold_seconds"] = r.get("cold_seconds")
+            # ingest is the warm-from-disk run's rate (a cold run's would
+            # always read 0.0: its one miss is the trace filling the cache)
             out["cache_hit_rates"] = {
                 k: r.get(f"{k}_hit_rate")
                 for k in ("pricing", "block_stage", "ingest", "memory")}
+            out["persistent_cache"] = {
+                "first_call_s": r.get("persistent_first_call_s"),
+                "variant_call_s": r.get("persistent_variant_call_s"),
+                "report_hits": r.get("persistent_report_hits"),
+                "ingest_hit_rate": r.get("persistent_ingest_hit_rate")}
         elif bench == "fig13_dse" and case == "exploration":
             out["sweep_configs_per_sec"] = r.get("configs_per_sec")
             out["sweep_wall_s"] = r.get("wall_s")
             out["sweep_pricing_hit_rate"] = r.get("pricing_hit_rate")
             out["sweep_n_reuse_groups"] = r.get("n_reuse_groups")
+        elif bench == "fig13_dse" and case == "exploration_workers":
+            out["sweep_workers"] = r.get("workers")
+            out["sweep_workers_configs_per_sec"] = r.get("configs_per_sec")
         elif bench == "serving_sim" and "sim_requests_per_sec" in r:
             out.setdefault("serving_requests_per_sec", {})[case] = \
                 r["sim_requests_per_sec"]

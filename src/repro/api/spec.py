@@ -29,6 +29,8 @@ escalates the warning to an error for intra-repo callers.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from dataclasses import dataclass, field
 from typing import ClassVar
 
@@ -225,6 +227,13 @@ class SimSpec:
             object.__setattr__(self, "_hash", h)
         return h
 
+    def __getstate__(self):
+        # string hashes are salted per process: a pickled memo would poison
+        # dict lookups in the loading process (persistent SimCache tier)
+        d = dict(self.__dict__)
+        d.pop("_hash", None)
+        return d
+
     # ------------------------------------------------------------------
     @property
     def mode(self) -> str:
@@ -235,17 +244,26 @@ class SimSpec:
         dp = max(self.parallel.dp * self.parallel.pods, 1)
         return max(self.workload.global_batch // dp, 1)
 
+    def trace_shapes(self) -> tuple:
+        """``(B_local, seq, cache)`` as the simulator's ingest stage sees
+        them — the shape part of the traced-graph identity.  Single source
+        of truth for :meth:`reuse_key` and the sweep's worker sharding
+        (``repro.api.sweep._shard_items``): the two must agree or workers
+        duplicate JAX traces."""
+        w = self.workload
+        seq = w.seq_len if w.mode != "decode" else 1
+        cache = w.cache_len or (w.seq_len if w.mode == "decode" else 0)
+        return (self.B_local(), seq, cache)
+
     def reuse_key(self) -> tuple:
         """Specs with equal reuse keys share traced/transformed/priced block
         graphs inside one simulator — the sweep sorts candidates by this key
         so each group pays the expensive stages once (``shard_key`` leads so
         legacy tp/pp/batch sweeps keep their historical evaluation order)."""
         w = self.workload
-        seq = w.seq_len if w.mode != "decode" else 1
-        cache = w.cache_len or (w.seq_len if w.mode == "decode" else 0)
         remat = getattr(w, "remat", "none") if w.mode == "train" else "none"
         return (self.cluster.hardware, self.model.name, w.mode,
-                self.parallel.shard_key(), self.B_local(), seq, cache,
+                self.parallel.shard_key()) + self.trace_shapes() + (
                 w.fusion, w.quantize or "", remat)
 
     # ------------------------------------------------------------------
@@ -277,6 +295,35 @@ class SimSpec:
         return cls(model=ModelConfig(**d["model"]), cluster=Cluster(**cl),
                    parallel=ParallelConfig(**d["parallel"]),
                    workload=workload)
+
+    # ------------------------------------------------------------------
+    def to_json(self) -> str:
+        """Stable JSON form: sorted keys, compact separators, tuples as
+        arrays.  ``from_json(to_json())`` rebuilds an equal spec with an
+        equal hash, so the string (and :meth:`json_hash`) can serve as a
+        cross-process cache key, a sweep-manifest row, or a result
+        provenance record."""
+        return json.dumps(self.asdict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    def json_hash(self) -> str:
+        """sha256 hex digest of :meth:`to_json` — the persistent SimCache's
+        report key (stable across processes, unlike ``hash()``)."""
+        return hashlib.sha256(self.to_json().encode()).hexdigest()
+
+    @classmethod
+    def from_json(cls, s: str) -> "SimSpec":
+        """Inverse of :meth:`to_json` (hash-preserving round trip)."""
+        d = json.loads(s)
+        # JSON has no tuples: restore the fields whose types (and therefore
+        # the spec's hash) depend on them
+        m = d.get("model", {})
+        if "block_pattern" in m:
+            m["block_pattern"] = tuple(m["block_pattern"])
+        w = d.get("workload", {})
+        if "trace" in w:
+            w["trace"] = tuple(tuple(row) for row in w["trace"])
+        return cls.from_dict(d)
 
     @staticmethod
     def from_legacy(cfg: ModelConfig, hw, *, mode: str = "train",

@@ -134,10 +134,12 @@ class SweepSpace:
             yield spec
 
 
-def _sim_for(cluster, sims: dict, engine: str) -> Simulator:
+def _sim_for(cluster, sims: dict, engine: str,
+             persist: str | None = None) -> Simulator:
     key = cluster.hardware
     if key not in sims:
-        sims[key] = Simulator(cluster.resolve(), engine=engine)
+        sims[key] = Simulator(cluster.resolve(), engine=engine,
+                              persist=persist)
     return sims[key]
 
 
@@ -157,10 +159,91 @@ def _merge_stats(deltas: list[dict]) -> dict:
     return out
 
 
+def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
+              objective: str, scenario, persist: str | None = None) -> list:
+    """Evaluate ``(idx, spec, cand)`` triples in order; returns
+    ``(idx, EvalResult)`` pairs.  The single evaluation code path shared by
+    the serial sweep and every worker shard — parallel sweeps are
+    bit-identical to serial ones because both run exactly this function."""
+    results: list[tuple[int, EvalResult]] = []
+    for idx, spec, cand in items:
+        s = _sim_for(spec.cluster, sims, engine, persist)
+        # snapshot a lazily-created simulator's counters before its first
+        # run: the collectives memo is process-global, not zero at birth
+        if spec.cluster.hardware not in stats0:
+            stats0[spec.cluster.hardware] = s.cache_stats()
+        rep = s.run(spec)
+        res = EvalResult(cand, rep, spec=spec)
+        limit = spec.cluster.memory_limit
+        if limit and rep.memory and rep.memory.total > limit:
+            res.pruned = True
+            res.reason = f"memory {rep.memory.total/1e9:.1f}GB > limit"
+        results.append((idx, res))
+
+    if objective == "goodput":
+        # deferred import: repro.serving pulls the real-model serving stack,
+        # which the step-time-only path never needs
+        from repro.serving.sim import ServingScenario
+        if scenario is None:
+            scenario = ServingScenario.default()
+        elif isinstance(scenario, ServingWorkload):
+            scenario = scenario.scenario()
+        for idx, res in results:
+            if res.pruned:
+                continue
+            s = _sim_for(res.spec.cluster, sims, engine, persist)
+            res.serving = scenario.evaluate(s, res.spec.model, res.cand)
+    return results
+
+
+def _sweep_worker(payload: tuple):
+    """Process-pool entry: evaluate one shard with process-local simulators.
+
+    Returns the shard's ``(idx, EvalResult)`` pairs plus its cache-stat and
+    collectives deltas (each worker owns fresh process-global counters under
+    the default spawn context)."""
+    shard, engine, objective, scenario, persist = payload
+    sims: dict[str, Simulator] = {}
+    stats0: dict[str, dict] = {}
+    coll0 = collective_memo_stats().as_dict()
+    results = _evaluate(shard, sims, stats0, engine, objective, scenario,
+                        persist)
+    deltas = [_stats_delta(s.cache_stats(), stats0.get(k, {}))
+              for k, s in sims.items()]
+    coll1 = collective_memo_stats().as_dict()
+    coll = {k: coll1[k] - coll0[k] for k in ("hits", "misses")}
+    return results, _merge_stats(deltas), coll
+
+
+def _shard_items(items: list, workers: int) -> list[list]:
+    """Deterministically shard ``(idx, spec, cand)`` triples over workers.
+
+    Whole trace-affinity clusters — contiguous runs of reuse groups that
+    share a traced-graph (``ingest``) key — are kept together, so each
+    worker's per-process ingest cache traces any given shape exactly once
+    and no two workers duplicate a trace.  Clusters go to the currently
+    lightest shard (greedy balance; ties break on shard index), which is a
+    pure function of the candidate list, so the shard layout — and thus
+    every worker-local cache interaction — is reproducible."""
+    def trace_key(spec: SimSpec) -> tuple:
+        return (spec.cluster.hardware, spec.model,
+                spec.workload.mode) + spec.trace_shapes()
+
+    clusters: dict[tuple, list] = {}
+    for item in items:
+        clusters.setdefault(trace_key(item[1]), []).append(item)
+    shards: list[list] = [[] for _ in range(workers)]
+    for cluster in clusters.values():
+        target = min(range(workers), key=lambda i: (len(shards[i]), i))
+        shards[target].extend(cluster)
+    return [s for s in shards if s]
+
+
 def sweep(space: SweepSpace, *, sim: Simulator | None = None,
           engine: str = "analytical", rules: list[Callable] | None = None,
           max_evals: int = 10_000, objective: str = "step_time",
-          scenario=None) -> ExplorationResult:
+          scenario=None, workers: int = 1, persist: str | None = None,
+          mp_context: str = "spawn") -> ExplorationResult:
     """Enumerate, prune, simulate and rank every spec in ``space``.
 
     ``sim`` seeds the per-hardware simulator registry (its caches stay warm
@@ -171,6 +254,14 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
     request-level scenario per candidate — pass a
     :class:`~repro.serving.sim.ServingScenario`, a
     :class:`~repro.api.spec.ServingWorkload`, or None for the default.
+
+    ``workers > 1`` shards candidate groups by reuse/trace key over that
+    many OS processes (``mp_context``, default spawn); results, rankings and
+    pruned reasons are bit-identical to the serial sweep, with the merged
+    ``cache_stats`` summing the per-worker deltas.  ``sim=`` is not used for
+    evaluation in that case (worker processes own their simulators); pass
+    ``persist=`` (a directory) to warm-start every worker from — and let
+    serial sweeps save to — the on-disk cache tier instead.
     """
     if objective not in ("step_time", "goodput"):
         raise ValueError(f"unknown objective {objective!r}")
@@ -203,39 +294,53 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
     # hits the simulator's block-stage cache while it is warm
     cands.sort(key=lambda sc: (sc[0].reuse_key(), sc[1].key()))
     n_groups = len({s.reuse_key() for s, _ in cands})
+    items = [(i, spec, cand)
+             for i, (spec, cand) in enumerate(cands[:max_evals])]
+
+    workers = max(int(workers), 1)
+    if workers > 1 and len(items) > 1:
+        import concurrent.futures as cf
+        import multiprocessing as mp
+        shards = _shard_items(items, workers)
+        ctx = mp.get_context(mp_context)
+        merged: dict = {}
+        coll = {"hits": 0, "misses": 0}
+        shard_results: list = []
+        with cf.ProcessPoolExecutor(max_workers=len(shards),
+                                    mp_context=ctx) as pool:
+            for results, stats, wcoll in pool.map(
+                    _sweep_worker,
+                    [(s, engine, objective, scenario, persist)
+                     for s in shards]):
+                shard_results.extend(results)
+                for layer, st in stats.items():
+                    acc = merged.setdefault(layer, {"hits": 0, "misses": 0})
+                    acc["hits"] += st["hits"]
+                    acc["misses"] += st["misses"]
+                for k in coll:
+                    coll[k] += wcoll[k]
+        shard_results.sort(key=lambda r: r[0])   # restore serial order
+        evaluated = []
+        for _, res in shard_results:
+            (pruned if res.pruned else evaluated).append(res)
+        wall = time.time() - t0
+        merged["collectives"] = coll
+        return ExplorationResult(
+            evaluated, pruned, wall, n_groups=n_groups,
+            configs_per_sec=(len(items) / wall) if wall > 0 else 0.0,
+            cache_stats=merged, objective=objective, workers=workers)
+
     sims: dict[str, Simulator] = {}
     if sim is not None:
         sims[sim.hw.name] = sim
     stats0 = {k: s.cache_stats() for k, s in sims.items()}
-
-    evaluated: list[EvalResult] = []
-    for spec, cand in cands[:max_evals]:
-        s = _sim_for(spec.cluster, sims, engine)
-        # snapshot a lazily-created simulator's counters before its first
-        # run: the collectives memo is process-global, not zero at birth
-        if spec.cluster.hardware not in stats0:
-            stats0[spec.cluster.hardware] = s.cache_stats()
-        rep = s.run(spec)
-        res = EvalResult(cand, rep, spec=spec)
-        limit = spec.cluster.memory_limit
-        if limit and rep.memory and rep.memory.total > limit:
-            res.pruned = True
-            res.reason = f"memory {rep.memory.total/1e9:.1f}GB > limit"
-            pruned.append(res)
-            continue
-        evaluated.append(res)
-
-    if objective == "goodput":
-        # deferred import: repro.serving pulls the real-model serving stack,
-        # which the step-time-only path never needs
-        from repro.serving.sim import ServingScenario
-        if scenario is None:
-            scenario = ServingScenario.default()
-        elif isinstance(scenario, ServingWorkload):
-            scenario = scenario.scenario()
-        for res in evaluated:
-            s = _sim_for(res.spec.cluster, sims, engine)
-            res.serving = scenario.evaluate(s, res.spec.model, res.cand)
+    evaluated = []
+    for _, res in _evaluate(items, sims, stats0, engine, objective,
+                            scenario, persist):
+        (pruned if res.pruned else evaluated).append(res)
+    if persist:
+        for s in sims.values():
+            s.save_cache()
 
     wall = time.time() - t0
     deltas = [_stats_delta(s.cache_stats(), stats0.get(k, {}))
@@ -246,5 +351,5 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
                              for k in ("hits", "misses")}
     return ExplorationResult(
         evaluated, pruned, wall, n_groups=n_groups,
-        configs_per_sec=(len(cands[:max_evals]) / wall) if wall > 0 else 0.0,
+        configs_per_sec=(len(items) / wall) if wall > 0 else 0.0,
         cache_stats=merged, objective=objective)

@@ -100,6 +100,73 @@ class FusedEngine:
     def latency_us(self, node: OpNode) -> float | None:
         return self._priced(node)[0]
 
+    def price_batch(self, nodes) -> list:
+        """Vectorized pricing for a node batch (the scheduler's pre-pass).
+
+        Cache hits resolve per signature exactly like :meth:`latency_us`;
+        misses are grouped and pushed through the highest-priority engine's
+        ``price_batch`` when one exists (the analytical roofline vectorizes),
+        falling back to the scalar priority chain per node whenever a
+        profile-DB-backed engine could claim the node — batch results are
+        bit-identical to the scalar path by construction.  Duplicate
+        signatures within one batch count one miss then hits, matching the
+        scalar call sequence."""
+        if self._cache is None:
+            return [self._price(n)[0] for n in nodes]
+        v = self._state_version()
+        if v != self._version:
+            self._cache.clear()
+            self._version = v
+        out: list = [None] * len(nodes)
+        last = self.engines[-1] if self.engines else None
+        vec_engine = last if hasattr(last, "price_batch") else None
+        pending: dict[tuple, list[int]] = {}
+        sig_of: list = [None] * len(nodes)
+        for i, node in enumerate(nodes):
+            try:
+                sig = node_signature(node)
+            except TypeError:            # exotic attrs: price uncached
+                out[i] = self._price(node)[0]
+                continue
+            ent = self._cache.get(sig)
+            if ent is not None:
+                self.stats.hits += 1
+                out[i] = ent[0]
+            elif sig in pending:
+                self.stats.hits += 1     # scalar path: earlier miss primed it
+                pending[sig].append(i)
+            else:
+                self.stats.misses += 1
+                pending[sig] = [i]
+                sig_of[i] = sig
+        if not pending:
+            return out
+        vec_nodes: list[OpNode] = []
+        vec_sigs: list[tuple] = []
+        for i, sig in enumerate(sig_of):
+            if sig is None:
+                continue
+            node = nodes[i]
+            # a node any higher-priority engine claims keeps the scalar
+            # fallback chain (profile DBs may still decline with None)
+            if vec_engine is not None and vec_engine.supports(node) and not any(
+                    e.supports(node) for e in self.engines[:-1]):
+                vec_nodes.append(node)
+                vec_sigs.append(sig)
+            else:
+                ent = self._price(node)
+                self._cache[sig] = ent
+                for j in pending[sig]:
+                    out[j] = ent[0]
+        if vec_nodes:
+            prices = vec_engine.price_batch(vec_nodes)
+            for sig, t in zip(vec_sigs, prices):
+                ent = (t, vec_engine.name) if t is not None else (None, "none")
+                self._cache[sig] = ent
+                for j in pending[sig]:
+                    out[j] = ent[0]
+        return out
+
     def engine_for(self, node: OpNode) -> str:
         return self._priced(node)[1]
 

@@ -144,6 +144,7 @@ class ExplorationResult:
     configs_per_sec: float = 0.0
     cache_stats: dict = field(default_factory=dict)  # per-layer hits/misses
     objective: str = "step_time"
+    workers: int = 1                                # sweep evaluation processes
 
     def pareto(self, x=lambda r: r.tps_per_user, y=lambda r: r.tps_per_chip
                ) -> list[EvalResult]:

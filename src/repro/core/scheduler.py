@@ -54,6 +54,15 @@ class Timeline:
         return out
 
 
+def _prices(order: list[OpNode], engine) -> list[float]:
+    """Latency per node, via the engine's vectorized ``price_batch`` when it
+    has one (one numpy pass over the cache misses) else per-node calls."""
+    batch = getattr(engine, "price_batch", None)
+    lats = batch(order) if batch is not None \
+        else [engine.latency_us(n) for n in order]
+    return [0.0 if t is None else t for t in lats]
+
+
 def schedule(graph: Graph, engine, *, expand_repeats: bool = False,
              max_expand: int = 4096) -> Timeline:
     """Price every node with ``engine`` and list-schedule.
@@ -66,10 +75,9 @@ def schedule(graph: Graph, engine, *, expand_repeats: bool = False,
     done: dict[str, float] = {}
     eng_name = getattr(engine, "engine_for", None)
 
-    for node in graph.toposort():
-        lat = engine.latency_us(node)
-        if lat is None:
-            lat = 0.0
+    order = graph.toposort()
+    lats = _prices(order, engine)
+    for node, lat in zip(order, lats):
         stream = node.stream
         dep_ready = max((done.get(d, 0.0) for d in node.deps), default=0.0)
         reps = node.repeat if expand_repeats and node.repeat <= max_expand else 1
@@ -91,16 +99,21 @@ def schedule(graph: Graph, engine, *, expand_repeats: bool = False,
     return tl
 
 
-def schedule_times(graph: Graph, engine, hw=None) -> tuple[float, dict[str, float]]:
+def schedule_times(graph: Graph, engine, hw=None, *,
+                   overlap: str = "ratio") -> tuple[float, dict[str, float]]:
     """Interval-free fast path: ``(total_time, by_kind)`` via running scalars.
 
     Performs the same list-scheduling arithmetic as :func:`schedule` followed
-    by the ratio overlap model (core/overlap.py) when ``hw`` is given, but
-    keeps only flat per-op arrays — no ``Interval``/``Timeline`` allocation.
-    Accumulation order matches the interval path exactly, so the results are
-    bit-identical to ``apply_ratio_overlap(schedule(g, engine), hw)``.
-    Used by ``Simulator._time`` whenever ``keep_timelines=False``; traces and
-    the bandwidth-aware overlap model keep the interval-building path.
+    by the overlap model (core/overlap.py) when ``hw`` is given, but keeps
+    only flat per-op arrays — no per-node ``Interval``/``Timeline``
+    allocation.  Accumulation order matches the interval path exactly, so
+    ``overlap="ratio"`` is bit-identical to
+    ``apply_ratio_overlap(schedule(g, engine), hw)`` and
+    ``overlap="bandwidth"`` to ``apply_bandwidth_aware(...)`` — the latter is
+    *flow-compressed*: only the (few) comm flows materialize as intervals for
+    the progressive-filling fluid model; compute ops stay scalar columns.
+    Used by ``Simulator._time`` whenever ``keep_timelines=False``; only trace
+    export keeps the interval-building path.
     """
     starts: list[float] = []
     ends: list[float] = []
@@ -108,15 +121,19 @@ def schedule_times(graph: Graph, engine, hw=None) -> tuple[float, dict[str, floa
     comp_idx: list[int] = []
     comm_idx: list[int] = []
     comm_stream: list[str] = []
+    comm_nodes: list[OpNode] = []
     stream_free: dict[str, float] = {}
     done: dict[str, float] = {}
 
-    for node in graph.toposort():
-        lat = engine.latency_us(node)
-        if lat is None:
-            lat = 0.0
+    order = graph.toposort()
+    lats = _prices(order, engine)
+    for node, lat in zip(order, lats):
         stream = node.stream
-        dep_ready = max((done.get(d, 0.0) for d in node.deps), default=0.0)
+        dep_ready = 0.0
+        for d in node.deps:
+            v = done.get(d, 0.0)
+            if v > dep_ready:
+                dep_ready = v
         t = max(stream_free.get(stream, 0.0), dep_ready)
         end = t + lat * node.repeat
         i = len(starts)
@@ -128,15 +145,35 @@ def schedule_times(graph: Graph, engine, hw=None) -> tuple[float, dict[str, floa
         else:
             comm_idx.append(i)
             comm_stream.append(stream)
+            comm_nodes.append(node)
         stream_free[stream] = end
         done[node.name] = end
 
+    comm_streams = {i: s for i, s in zip(comm_idx, comm_stream)}
+    if overlap == "bandwidth" and comm_idx:
+        # fluid model first (mirrors apply_bandwidth_aware): adjusted comm
+        # ends feed the ratio pass, whose comm iteration order becomes the
+        # flows' start-sorted order — exactly the Timeline the interval path
+        # would hand to apply_ratio_overlap
+        from repro.core.overlap import bandwidth_aware_comm
+        flows = [Interval(name=str(i), kind=kinds[i], stream=comm_stream[j],
+                          start=starts[i], end=ends[i],
+                          comm_bytes=comm_nodes[j].comm_bytes
+                          * comm_nodes[j].repeat)
+                 for j, i in enumerate(comm_idx)]
+        adjusted = bandwidth_aware_comm(flows)       # start-order preserved
+        for f in adjusted:
+            ends[int(f.name)] = f.end
+        comm_order = [int(f.name) for f in adjusted]
+    else:
+        comm_order = comm_idx
+
     extra: dict[int, float] = {}
-    if hw is not None and comm_idx:
+    if hw is not None and comm_order:
         sc = hw.overlap_slowdown_compute - 1.0
         sm = hw.overlap_slowdown_comm - 1.0
         smm = hw.overlap_slowdown_comm_comm - 1.0
-        for c in comm_idx:
+        for c in comm_order:
             cs, ce = starts[c], ends[c]
             for k in comp_idx:
                 ov = min(ce, ends[k]) - max(cs, starts[k])
@@ -144,11 +181,11 @@ def schedule_times(graph: Graph, engine, hw=None) -> tuple[float, dict[str, floa
                     continue
                 extra[k] = extra.get(k, 0.0) + ov * sc
                 extra[c] = extra.get(c, 0.0) + ov * sm
-        for a, c1 in enumerate(comm_idx):
-            for b in range(a + 1, len(comm_idx)):
-                if comm_stream[a] == comm_stream[b]:
+        for a, c1 in enumerate(comm_order):
+            for b in range(a + 1, len(comm_order)):
+                c2 = comm_order[b]
+                if comm_streams[c1] == comm_streams[c2]:
                     continue
-                c2 = comm_idx[b]
                 ov = min(ends[c1], ends[c2]) - max(starts[c1], starts[c2])
                 if ov <= 0:
                     continue
@@ -157,7 +194,13 @@ def schedule_times(graph: Graph, engine, hw=None) -> tuple[float, dict[str, floa
 
     total = 0.0
     by_kind: dict[str, float] = {}
-    for i in range(len(starts)):
+    if overlap == "bandwidth" and comm_idx:
+        # match Timeline(rest + adjusted).by_kind() summation order:
+        # compute ops in graph order, then comm flows in start-sorted order
+        sum_order = comp_idx + comm_order
+    else:
+        sum_order = range(len(starts))
+    for i in sum_order:
         end = ends[i] + extra.get(i, 0.0)
         if end > total:
             total = end

@@ -7,7 +7,10 @@ dependency-aware scheduling + overlap modeling -> multi-granularity reports
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import math
+import os
 from dataclasses import dataclass, field
 
 import jax
@@ -24,7 +27,7 @@ from repro.core.backend.prediction import PredictionEngine
 from repro.core.backend.profiling import ProfileDB, ProfilingEngine
 from repro.core.ir import Graph
 from repro.core.memory import MemoryReport, block_liveness, simulate_memory
-from repro.core.model_ingest import ModelGraphs, block_graphs, ingest_key
+from repro.core.model_ingest import ModelGraphs, ingest_graphs, ingest_key
 from repro.core.overlap import apply_bandwidth_aware, apply_ratio_overlap
 from repro.core.passes.base import ParallelConfig, PassContext, PassManager
 from repro.core.simcache import SimCache
@@ -105,7 +108,7 @@ class Simulator:
     def __init__(self, hw: str | HardwareSpec = "tpu_v5e",
                  engine: str = "analytical", db: ProfileDB | None = None,
                  *, overlap: str = "ratio", measure_on_miss: bool = False,
-                 cache: bool = True):
+                 cache: bool = True, persist: str | None = None):
         self.hw = HARDWARE[hw] if isinstance(hw, str) else hw
         self.db = db or ProfileDB()
         self.overlap = overlap
@@ -124,6 +127,44 @@ class Simulator:
         elif engine == "prediction":
             engines = [e for e in engines if e.name in ("prediction", "analytical")]
         self.engine = FusedEngine(engines, cache=cache)
+        # persistent cross-run tier: explicit ``persist=`` dir, else the
+        # CHARON_CACHE_DIR environment knob (loads are automatic; writes
+        # only happen on an explicit save_cache() call)
+        persist = persist or os.environ.get("CHARON_CACHE_DIR")
+        if persist and cache:
+            path = (f"simcache-{self.hw.name}-"
+                    f"{'+'.join(e.name for e in self.engine.engines)}"
+                    f"-{overlap}.pkl")
+            pricing = self.cache.attach_persistent(
+                os.path.join(os.path.expanduser(persist), path),
+                self._persist_meta())
+            if pricing and self.engine._cache is not None:
+                self.engine._cache.update(pricing)
+
+    def _persist_meta(self) -> dict:
+        """Versioned identity of everything the persisted entries depend on.
+        Computed fresh at attach AND at save time: a profile-DB mutated
+        after construction must be described by its *mutated* digest, so a
+        process with the original DB can never load entries priced under
+        the new state (and vice versa)."""
+        import repro
+        from repro.core.simcache import CACHE_FORMAT
+        digest = "|".join(f"{e.name}:{int(getattr(e, 'state_version', 0))}"
+                          for e in self.engine.engines)
+        if self.db.data:
+            digest += "|db:" + hashlib.sha1(json.dumps(
+                self.db.data, sort_keys=True, default=str)
+                .encode()).hexdigest()
+        return {"format": CACHE_FORMAT, "repro": repro.__version__,
+                "jax": jax.__version__, "hw": self.hw.name,
+                "overlap": self.overlap, "engines": digest}
+
+    def save_cache(self):
+        """Write the persistent tier to disk (no-op without ``persist=`` /
+        ``CHARON_CACHE_DIR``).  Returns the written path or None."""
+        return self.cache.save_persistent(
+            self.engine._cache if self.engine._cache else None,
+            meta=self._persist_meta())
 
     def cache_stats(self) -> dict:
         """Hit/miss counters for every cache layer (benchmark telemetry)."""
@@ -180,9 +221,10 @@ class Simulator:
         (timelines are per-call artifacts) but still reuses the lower two.
         """
         train = mode == "train"
-        # fast path: totals via running scalars, no Interval allocation;
-        # bandwidth-aware overlap needs real intervals, traces need timelines
-        use_fast = not keep_timelines and self.overlap != "bandwidth"
+        # fast path: totals via running scalars, no per-node Interval
+        # allocation — the bandwidth-aware model joins via its
+        # flow-compressed schedule_times variant; traces need timelines
+        use_fast = not keep_timelines
         ikey = ingest_key(cfg, B_local, S, mode, cache_len)
         pm = self._passes(cfg, par, fusion=fusion, quantize=quantize,
                           remat=remat, train=train)
@@ -190,7 +232,7 @@ class Simulator:
         shard = par.shard_key()
 
         def build() -> _BlockStage:
-            mg = self.cache.get("ingest", ikey, lambda: block_graphs(
+            mg = self.cache.get("ingest", ikey, lambda: ingest_graphs(
                 cfg, B_local, S, mode, cache_len=cache_len))
             ctx = PassContext(parallel=par, model=cfg)
 
@@ -208,7 +250,8 @@ class Simulator:
             for bg in mg.all_blocks():
                 fwd = passed(bg.fwd, bg.kind, "fwd")
                 if use_fast:
-                    tf, bk = schedule_times(fwd, self.engine, self.hw)
+                    tf, bk = schedule_times(fwd, self.engine, self.hw,
+                                            overlap=self.overlap)
                 else:
                     tf, tlf = self._time(fwd)
                     bk = tlf.by_kind()
@@ -221,7 +264,8 @@ class Simulator:
                     first_fwd = fwd
                 if train and bg.joint is not None:
                     joint = passed(bg.joint, bg.kind, "joint")
-                    tj = schedule_times(joint, self.engine, self.hw)[0] \
+                    tj = schedule_times(joint, self.engine, self.hw,
+                                          overlap=self.overlap)[0] \
                         if use_fast else self._time(joint)[0]
                     t_bwd[bg.kind] = max(tj - tf, tf)  # bwd >= fwd in practice
                     if bg.kind == first_kind:
@@ -252,8 +296,18 @@ class Simulator:
         if getattr(w, "mode", None) == "serving":
             raise TypeError("serving workloads are request-level: use "
                             "ServingSimulator(sim).run(spec)")
-        return self._simulate(spec.model, par=spec.parallel,
-                              keep_timelines=keep_timelines, **w.sim_kwargs())
+        if keep_timelines or not self.cache.persistent:
+            return self._simulate(spec.model, par=spec.parallel,
+                                  keep_timelines=keep_timelines,
+                                  **w.sim_kwargs())
+        # cross-run memo (persistent tier attached): the stable spec JSON
+        # hash is the on-disk key, the engine state version rides along so a
+        # profile-DB put / prediction retrain can never serve a stale Report
+        key = (spec.json_hash(), self.engine._state_version())
+        return self.cache.get(
+            "reports", key,
+            lambda: self._simulate(spec.model, par=spec.parallel,
+                                   **w.sim_kwargs()))
 
     def simulate(self, cfg: ModelConfig, *, mode: str = "train",
                  global_batch: int = 8, seq_len: int = 2048,

@@ -17,6 +17,13 @@ EP/SP stay, so sharding and pipeline-latency effects are still priced.
 Bucketing rounds *up*, so prices are mildly conservative (a batch of 9 pays
 the batch-16 step); ``ctx_floor`` bounds the number of distinct context
 buckets, which bounds cold JAX traces per sweep.
+
+When the owning simulator has a persistent tier attached
+(``Simulator(persist=dir)`` / ``CHARON_CACHE_DIR``), the ``serving`` bucket
+— bucketed spec keys and their priced ``Report``s — survives across
+processes, so a repeated serving benchmark replays its whole trace without
+a single JAX trace; oracle misses additionally land in the cross-run
+``reports`` tier via ``Simulator.run``.
 """
 from __future__ import annotations
 

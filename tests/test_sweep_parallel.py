@@ -1,0 +1,355 @@
+"""PR-5 sweep-throughput overhaul invariants.
+
+Four contracts:
+
+* ``price_batch`` (vectorized roofline + fused-engine batch path) is
+  bit-identical to scalar pricing over a randomized node corpus, on every
+  hardware spec, including the cache hit/miss accounting.
+* The flow-compressed ``schedule_times(overlap="bandwidth")`` fast path
+  reproduces the interval-building ``apply_bandwidth_aware`` exactly.
+* ``sweep(space, workers=2)`` (reuse-sharded multiprocess evaluation)
+  produces the same rankings, reports and pruned reasons as the serial sweep.
+* The persistent SimCache tier round-trips bit-identically and is
+  invalidated by engine-state and package-version bumps; batch
+  extrapolation in ingest is bit-exact or self-disabling.
+"""
+import dataclasses
+import random
+
+import pytest
+
+from repro.api import (
+    Cluster, DecodeWorkload, PrefillWorkload, SimSpec, SweepSpace,
+    TrainWorkload, sweep,
+)
+from repro.configs import get_config
+from repro.core import ParallelConfig, Simulator
+from repro.core.backend.analytical import AnalyticalEngine
+from repro.core.backend.engine import FusedEngine
+from repro.core.backend.hardware import HARDWARE, TPU_V5E
+from repro.core.ir import Graph, OpNode
+from repro.core.overlap import apply_bandwidth_aware
+from repro.core.scheduler import schedule, schedule_times
+
+CFG = get_config("xlstm-125m")
+
+
+# ------------------------- vectorized pricing -----------------------------
+
+def _random_nodes(n=400, seed=0):
+    rng = random.Random(seed)
+    kinds = ["matmul", "attention", "elementwise", "norm", "copy", "scatter",
+             "reduce", "fused", "all_reduce", "all_gather", "reduce_scatter",
+             "send"]
+    nodes = []
+    for i in range(n):
+        k = rng.choice(kinds)
+        node = OpNode(
+            f"n{i}", k, dtype=rng.choice(["bf16", "f32", "int8", "f8"]),
+            flops=rng.choice([0.0, rng.random() * 1e12]),
+            bytes_in=rng.choice([0.0, rng.random() * 1e9]),
+            bytes_out=rng.random() * 1e8,
+            comm_bytes=rng.random() * 1e8 if k.startswith(("all", "red", "se"))
+            else 0.0,
+            comm_group=rng.choice(["tp", "dp", "pod"]),
+            comm_size=rng.choice([2, 4, 8]))
+        if k in ("matmul", "fused") and rng.random() < 0.8:
+            node.attrs["mm_dims"] = (rng.randrange(1, 4096),
+                                     rng.randrange(1, 4096),
+                                     rng.randrange(1, 4096))
+        if k == "scatter":
+            node.attrs["operand_bytes"] = rng.random() * 1e9
+        nodes.append(node)
+    return nodes
+
+
+@pytest.mark.parametrize("hw_name", sorted(HARDWARE))
+def test_price_batch_matches_scalar_exactly(hw_name):
+    hw = HARDWARE[hw_name]
+    nodes = _random_nodes()
+    scalar = [AnalyticalEngine(hw).latency_us(n) for n in nodes]
+    assert AnalyticalEngine(hw).price_batch(nodes) == scalar
+    fe = FusedEngine([AnalyticalEngine(hw)])
+    assert fe.price_batch(nodes) == scalar
+    # stats accounting matches the scalar call sequence (dup sigs hit)
+    fe2 = FusedEngine([AnalyticalEngine(hw)])
+    assert [fe2.latency_us(n) for n in nodes] == scalar
+    assert (fe.stats.hits, fe.stats.misses) == (fe2.stats.hits,
+                                                fe2.stats.misses)
+
+
+def test_price_batch_profile_db_fallback_per_node():
+    # a profile-DB-backed engine claims its nodes per-node; the rest
+    # still go through the vectorized analytical path — and a DB mutation
+    # invalidates the batch-primed price memo exactly like the scalar one
+    from repro.core.backend.profiling import ProfileDB, node_key
+    db = ProfileDB(path="/nonexistent/empty.json")
+    sim = Simulator("tpu_v5e", engine="profiling", db=db)
+    nodes = _random_nodes(100, seed=1)
+    scalar = [Simulator("tpu_v5e", engine="profiling",
+                        db=ProfileDB(path="/nonexistent/empty.json"))
+              .engine.latency_us(n) for n in nodes]
+    assert sim.engine.price_batch(nodes) == scalar
+    mm = next(n for n in nodes if n.kind == "matmul")
+    db.put(node_key(mm, sim.hw.name), 123.0, {})
+    assert sim.engine.price_batch([mm]) == [123.0]
+    assert sim.engine.engine_for(mm) == "profiling"
+
+
+def test_schedule_uses_batch_pricing_consistently():
+    g = Graph("g")
+    a = g.op("matmul", flops=1e9, bytes_in=1e6, bytes_out=1e6,
+             attrs={"mm_dims": (64, 512, 512)})
+    c = g.op("all_reduce", deps=[a.name], comm_bytes=4e6, comm_group="tp",
+             comm_size=8, overlappable=True, stream="tp_comm")
+    g.op("elementwise", deps=[a.name, c.name], bytes_in=1e6, bytes_out=1e6,
+         repeat=3)
+    eng = AnalyticalEngine(TPU_V5E)
+    tl = schedule(g, eng)
+    per_node = {n.name: eng.latency_us(n) for n in g}
+    for iv in tl.intervals:
+        assert iv.end == iv.start + per_node[iv.name] * g.nodes[iv.name].repeat
+
+
+# ---------------- bandwidth-aware flow-compressed fast path ----------------
+
+def _comm_heavy_graph():
+    g = Graph("bw")
+    a = g.op("matmul", flops=2e9, bytes_in=4e6, bytes_out=4e6)
+    c1 = g.op("all_reduce", deps=[a.name], comm_bytes=64e6, comm_group="tp",
+              comm_size=8, overlappable=True, stream="tp_comm")
+    c2 = g.op("all_gather", deps=[a.name], comm_bytes=32e6, comm_group="dp",
+              comm_size=4, overlappable=True, stream="dp_comm")
+    b = g.op("matmul", deps=[a.name], flops=3e9, bytes_in=4e6, bytes_out=4e6)
+    c3 = g.op("reduce_scatter", deps=[b.name], comm_bytes=16e6,
+              comm_group="dp", comm_size=4, overlappable=True,
+              stream="dp_comm")
+    g.op("elementwise", deps=[b.name, c1.name, c2.name, c3.name],
+         bytes_in=4e6, bytes_out=4e6, repeat=2)
+    return g
+
+
+def test_bandwidth_fast_path_matches_interval_path_graph_level():
+    g = _comm_heavy_graph()
+    eng = AnalyticalEngine(TPU_V5E)
+    tl = apply_bandwidth_aware(schedule(g, eng), TPU_V5E)
+    total, by_kind = schedule_times(g, eng, TPU_V5E, overlap="bandwidth")
+    assert total == tl.total_time
+    assert by_kind == tl.by_kind()
+
+
+def test_bandwidth_fast_path_matches_interval_path_simulator():
+    sim = Simulator("tpu_v5e", engine="analytical", overlap="bandwidth")
+    for spec in (
+        SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=4),
+                workload=DecodeWorkload(global_batch=8, seq_len=1024)),
+        SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=2, pp=2,
+                                             microbatches=2),
+                workload=TrainWorkload(global_batch=16, seq_len=512)),
+    ):
+        fast = sim.run(spec)
+        slow = sim.run(spec, keep_timelines=True)
+        assert fast.step_time_us == pytest.approx(slow.step_time_us,
+                                                  rel=1e-12)
+        assert fast.kind_us == pytest.approx(slow.kind_us, rel=1e-12)
+
+
+# ------------------------- multiprocess sweeps -----------------------------
+
+def _space(memory_limit=16e9):
+    base = SimSpec(CFG, cluster=Cluster("tpu_v5e", chips=16,
+                                        memory_limit=memory_limit),
+                   workload=DecodeWorkload(seq_len=1024))
+    return SweepSpace(base, {"tp": (1, 2, 4), "pp": (1, 2),
+                             "batch": (8, 16, 32)})
+
+
+def _result_key(res):
+    return (
+        [(r.cand.key(), r.report.step_time_us, r.report.mfu,
+          sorted(r.report.kind_us.items()), r.report.memory.total)
+         for r in res.evaluated],
+        [(r.cand.key(), r.reason) for r in res.pruned],
+        [(r.cand.key(), r.report.step_time_us) for r in res.ranked()],
+        [r.cand.key() for r in res.pareto()],
+    )
+
+
+def test_parallel_sweep_bit_identical_to_serial():
+    serial = sweep(_space())
+    parallel = sweep(_space(), workers=2)
+    assert _result_key(serial) == _result_key(parallel)
+    assert parallel.workers == 2 and serial.workers == 1
+    # merged worker cache stats cover the same layers
+    for layer in ("ingest", "block_times", "pricing", "collectives"):
+        assert layer in parallel.cache_stats
+    # every candidate was evaluated exactly once across shards
+    assert len(parallel.evaluated) + len(parallel.pruned) \
+        == len(serial.evaluated) + len(serial.pruned)
+
+
+def test_parallel_sweep_memory_pruning_matches():
+    serial = sweep(_space(memory_limit=2e9))
+    parallel = sweep(_space(memory_limit=2e9), workers=2)
+    assert [(p.cand.key(), p.reason) for p in serial.pruned] \
+        == [(p.cand.key(), p.reason) for p in parallel.pruned]
+
+
+def test_shard_items_keeps_trace_families_together():
+    from repro.api.sweep import _shard_items
+    items = []
+    idx = 0
+    for spec in _space().points():
+        from repro.core.explorer import Candidate
+        items.append((idx, spec, Candidate(spec.parallel,
+                                           spec.workload.global_batch)))
+        idx += 1
+    shards = _shard_items(items, 2)
+    assert sum(len(s) for s in shards) == len(items)
+    # no (B_local, seq, cache) ingest family straddles two shards
+    def fams(shard):
+        return {(s.B_local(), s.workload.seq_len, s.workload.cache_len)
+                for _, s, _ in shard}
+    inter = fams(shards[0]) & fams(shards[1]) if len(shards) > 1 else set()
+    assert not inter
+
+
+# ------------------------- persistent cache --------------------------------
+
+def test_persistent_cache_roundtrip_bit_identical(tmp_path):
+    spec = SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=4),
+                   workload=DecodeWorkload(global_batch=8, seq_len=512))
+    fresh = Simulator("tpu_v5e").run(spec)
+    s1 = Simulator("tpu_v5e", persist=str(tmp_path))
+    r1 = s1.run(spec)
+    assert s1.save_cache() is not None
+    s2 = Simulator("tpu_v5e", persist=str(tmp_path))
+    r2 = s2.run(spec)
+    for a, b in ((r1, fresh), (r2, fresh)):
+        assert a.step_time_us == b.step_time_us
+        assert a.kind_us == b.kind_us
+        assert a.memory.total == b.memory.total
+    # exact repeat is served whole from the reports tier...
+    assert s2.cache_stats()["reports"]["hits"] == 1
+    assert s2.cache.loaded_sizes.get("ingest", 0) >= 1
+    # ...and a changed shard config (same B_local, so same traced shapes)
+    # skips tracing via the persisted ingest entry
+    variant = dataclasses.replace(
+        spec, parallel=ParallelConfig(tp=1, dp=4))
+    s2.run(variant)
+    assert s2.cache_stats()["ingest"]["hits"] >= 1
+    assert s2.cache_stats()["ingest"]["misses"] == 0
+
+
+def test_persistent_cache_disabled_by_default(tmp_path):
+    spec = SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=4),
+                   workload=DecodeWorkload(global_batch=8, seq_len=512))
+    sim = Simulator("tpu_v5e")
+    sim.run(spec)
+    assert not sim.cache.persistent
+    assert sim.save_cache() is None
+    assert sim.cache_stats()["reports"]["hits"] == 0
+    assert sim.cache_stats()["reports"]["misses"] == 0
+
+
+def test_persistent_cache_invalidated_on_package_version_bump(tmp_path):
+    import repro
+    spec = SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=4),
+                   workload=DecodeWorkload(global_batch=8, seq_len=512))
+    s1 = Simulator("tpu_v5e", persist=str(tmp_path))
+    s1.run(spec)
+    s1.save_cache()
+    old = repro.__version__
+    try:
+        repro.__version__ = old + ".post-bump"
+        s2 = Simulator("tpu_v5e", persist=str(tmp_path))
+        assert s2.cache.loaded_sizes == {}          # wholesale invalidation
+        s2.run(spec)
+        assert s2.cache_stats()["reports"]["misses"] == 1
+        assert s2.cache_stats()["reports"]["hits"] == 0
+    finally:
+        repro.__version__ = old
+
+
+def test_persistent_cache_invalidated_on_engine_state_bump(tmp_path):
+    from repro.core.backend.profiling import ProfileDB
+    spec = SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=4),
+                   workload=DecodeWorkload(global_batch=8, seq_len=512))
+    db = ProfileDB(path="/nonexistent/empty.json")
+    s1 = Simulator("tpu_v5e", engine="profiling", db=db,
+                   persist=str(tmp_path))
+    r1 = s1.run(spec)
+    s1.save_cache()
+    # same engine state loads warm
+    s2 = Simulator("tpu_v5e", engine="profiling",
+                   db=ProfileDB(path="/nonexistent/empty.json"),
+                   persist=str(tmp_path))
+    assert s2.cache.loaded_sizes.get("reports", 0) == 1
+    assert s2.run(spec).step_time_us == r1.step_time_us
+    # a profile-DB with different contents must invalidate wholesale
+    db3 = ProfileDB(path="/nonexistent/empty.json")
+    db3.put("tpu_v5e|matmul|1,1,1|bf16", 1.0, {})
+    s3 = Simulator("tpu_v5e", engine="profiling", db=db3,
+                   persist=str(tmp_path))
+    assert s3.cache.loaded_sizes == {}
+    # in-process mutation after attach: the reports key carries the engine
+    # state version, so the stale report is never served
+    db3.put("tpu_v5e|matmul|2,2,2|bf16", 2.0, {})
+    v0 = s3.engine._state_version()
+    s3.run(spec)
+    db3.put("tpu_v5e|matmul|3,3,3|bf16", 3.0, {})
+    s3.run(spec)
+    assert s3.engine._state_version() != v0
+    assert s3.cache_stats()["reports"]["misses"] == 2
+    # save_cache() after the mutation must stamp the file with the *mutated*
+    # state (recomputed at save time): a process whose DB matches the
+    # construction-time state may never load entries priced post-mutation
+    s3.save_cache()
+    s4 = Simulator("tpu_v5e", engine="profiling",
+                   db=ProfileDB(path="/nonexistent/empty.json"),
+                   persist=str(tmp_path))
+    assert s4.cache.loaded_sizes == {}
+
+
+def test_persistent_cache_corrupt_file_is_cold_start(tmp_path):
+    spec = SimSpec(CFG, parallel=ParallelConfig(tp=2, dp=4),
+                   workload=DecodeWorkload(global_batch=8, seq_len=512))
+    s1 = Simulator("tpu_v5e", persist=str(tmp_path))
+    s1.run(spec)
+    path = s1.save_cache()
+    path.write_bytes(b"not a pickle")
+    s2 = Simulator("tpu_v5e", persist=str(tmp_path))
+    assert s2.cache.loaded_sizes == {}
+    assert s2.run(spec).step_time_us == s1.run(spec).step_time_us
+
+
+# --------------------- ingest batch extrapolation --------------------------
+
+def test_ingest_extrapolation_bit_exact_and_self_verifying():
+    from repro.core.model_ingest import (
+        block_graphs, ingest_extrapolation_clear,
+        ingest_extrapolation_stats, ingest_graphs,
+    )
+
+    def sig(mg):
+        return [
+            (bg.kind, bg.repeat,
+             [(n.name, n.kind, n.dtype, n.flops, n.bytes_in, n.bytes_out,
+               tuple(n.out_shape), tuple(sorted(n.attrs.items())),
+               tuple(n.deps), n.repeat)
+              for g in (bg.fwd, bg.joint) if g is not None
+              for n in g.toposort()])
+            for bg in mg.all_blocks()]
+
+    ingest_extrapolation_clear()
+    try:
+        for B in (1, 2, 4, 8, 16, 32, 64):
+            a = ingest_graphs(CFG, B, 1, "decode", cache_len=512)
+            b = block_graphs(CFG, B, 1, "decode", cache_len=512)
+            assert sig(a) == sig(b), f"extrapolation diverged at B={B}"
+        st = ingest_extrapolation_stats()
+        # anchors (2,4) + verification (8,16) traced; 32/64 extrapolated
+        assert st["extrapolated"] >= 2
+        assert st["traced"] <= 5
+    finally:
+        ingest_extrapolation_clear()
