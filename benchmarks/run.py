@@ -34,6 +34,7 @@ BENCHES = [
     ("sec51_dynamic_sp", "benchmarks.bench_dynamic_sp"),
     ("fig1_sim_cost", "benchmarks.bench_sim_speed"),
     ("sec53_serving", "benchmarks.bench_serving"),
+    ("sec53_fleet", "benchmarks.bench_fleet"),
 ]
 
 
@@ -68,6 +69,13 @@ def _perf_summary(rows: list[dict]) -> dict:
                 r["sim_requests_per_sec"]
             out.setdefault("serving_oracle_hit_rate", {})[case] = \
                 r.get("oracle_hit_rate")
+        elif bench == "fleet_sim" and "sim_requests_per_sec" in r:
+            out.setdefault("fleet_requests_per_sec", {})[case] = \
+                r["sim_requests_per_sec"]
+            out.setdefault("fleet_oracle_hit_rate", {})[case] = \
+                r.get("oracle_hit_rate")
+        elif bench == "fleet_sim" and case == "fleet_sweep":
+            out["fleet_sweep_wall_s"] = r.get("wall_s")
     return out
 
 

@@ -7,11 +7,15 @@ and prints the latency/goodput table a deployment decision reads.  Part 2
 runs the same declarative sweep twice over the candidates — ranked by
 steady-state step time vs by request-level SLO goodput — and shows that the
 two objectives pick different winners (the docs/serving.md scenario).
+Part 3 scales the same spec surface to a fleet: a diurnal trace through
+routed replicas with a queue-depth autoscaler (docs/serving.md, "Fleet
+simulation").
 """
 import time
 
 from repro.api import (
-    Cluster, DecodeWorkload, ServingWorkload, SimSpec, SweepSpace, sweep,
+    AutoscalerSpec, Cluster, DecodeWorkload, FleetSpec, RouterSpec,
+    ServingWorkload, SimSpec, SweepSpace, sweep,
 )
 from repro.configs import get_config
 from repro.core import ParallelConfig, Simulator
@@ -82,3 +86,25 @@ best_s, best_g = res.ranked("step_time")[0], res.ranked("goodput")[0]
 print(f"\nstep-time winner tp{best_s.cand.par.tp}/b{best_s.cand.global_batch} "
       f"vs goodput winner tp{best_g.cand.par.tp}/b{best_g.cand.global_batch}: "
       f"the lowest-latency step starves admission capacity under load.")
+
+# ---- part 3: a fleet on the same spec surface ---------------------------
+# a diurnal trace routed over least-loaded replicas, with an autoscaler
+# activating standbys on queue depth; non-trivial fleet => FleetReport
+fleet_spec = SimSpec(
+    cfg, cluster=Cluster("tpu_v5e"), parallel=par,
+    workload=ServingWorkload(
+        n_requests=3000, arrival="diurnal", rate_rps=120.0, period_s=60.0,
+        prompt=LengthDist("lognormal", median=64.0, sigma=0.6, cap=512),
+        output=LengthDist("lognormal", median=24.0, sigma=0.5, cap=96),
+        seed=42, slo=SLO(ttft_s=0.5, tpot_ms=5.0), max_batch=16,
+        fleet=FleetSpec(replicas=2, router=RouterSpec("least_loaded"),
+                        autoscaler=AutoscalerSpec(min_replicas=2,
+                                                  max_replicas=6))))
+frep = ServingSimulator(sim).run(fleet_spec)
+ups = sum(1 for e in frep.autoscaler_trace
+          if e["action"].startswith("scale_up"))
+print(f"\nfleet: {frep.n_requests} diurnal requests over "
+      f"{frep.n_replicas} replicas ({frep.router} router, {ups} scale-ups): "
+      f"ttft_p99={frep.ttft_s.p99:.3f}s attain={frep.slo_attainment:.3f} "
+      f"goodput={frep.goodput_rps:.1f}rps")
+print("per-replica requests:", dict(sorted(frep.replica_requests.items())))

@@ -12,13 +12,15 @@ See ``docs/api.md`` for the full surface and the legacy-kwargs migration
 table.
 """
 from repro.api.spec import (
-    STEP_WORKLOADS, CharonDeprecationWarning, Cluster, DecodeWorkload,
-    PrefillWorkload, ServingWorkload, SimSpec, TrainWorkload,
+    STEP_WORKLOADS, AutoscalerSpec, CharonDeprecationWarning, Cluster,
+    DecodeWorkload, FleetSpec, PrefillWorkload, RouterSpec, ServingWorkload,
+    SimSpec, TrainWorkload,
 )
 from repro.api.sweep import SweepSpace, spec_replace, sweep
 
 __all__ = [
-    "STEP_WORKLOADS", "CharonDeprecationWarning", "Cluster", "DecodeWorkload",
-    "PrefillWorkload", "ServingWorkload", "SimSpec", "TrainWorkload",
+    "STEP_WORKLOADS", "AutoscalerSpec", "CharonDeprecationWarning", "Cluster",
+    "DecodeWorkload", "FleetSpec", "PrefillWorkload", "RouterSpec",
+    "ServingWorkload", "SimSpec", "TrainWorkload",
     "SweepSpace", "spec_replace", "sweep",
 ]

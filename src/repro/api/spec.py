@@ -127,6 +127,104 @@ class DecodeWorkload(_StepWorkload):
     mode: str = field(default="decode", init=False)
 
 
+# ---------------------------------------------------------------------------
+# Fleet spec types: replica pools, routing, autoscaling — frozen and hashable
+# like every other spec component, so ``workload.fleet.replicas`` is a sweep
+# axis and a fleet spec participates in cache keys / manifests for free.
+
+@dataclass(frozen=True)
+class RouterSpec:
+    """Which replica an arriving request lands on.
+
+    ``kind``: ``round_robin`` (arrival order — with a fixed fleet this is
+    exactly ``Workload.shard``), ``least_loaded`` (fewest in-flight
+    requests), or ``session_affinity`` (rendezvous-hash requests of one
+    session onto one replica, keeping its prompt prefix warm in that
+    replica's cache; sessionless requests use ``fallback``).
+    """
+    kind: str = "round_robin"
+    fallback: str = "least_loaded"  # session_affinity's sessionless policy
+
+    def __post_init__(self):
+        kinds = ("round_robin", "least_loaded", "session_affinity")
+        if self.kind not in kinds:
+            raise ValueError(f"router kind {self.kind!r} not in {kinds}")
+        if self.fallback not in kinds or self.fallback == "session_affinity":
+            raise ValueError(
+                f"router fallback {self.fallback!r} must be one of "
+                "('round_robin', 'least_loaded')")
+
+
+@dataclass(frozen=True)
+class AutoscalerSpec:
+    """Queue-depth autoscaling with hysteresis.
+
+    Every ``interval_s`` of simulated time the mean in-flight depth over
+    active replicas is sampled; above ``scale_up_queue`` a standby replica
+    activates (taking traffic ``provision_s`` later), below
+    ``scale_down_queue`` the least-loaded active replica deactivates (it
+    drains what it holds, so no request is ever dropped).  The up/down gap
+    plus ``cooldown_s`` between actions is the hysteresis.
+    """
+    min_replicas: int = 1
+    max_replicas: int = 8
+    scale_up_queue: float = 8.0
+    scale_down_queue: float = 1.0
+    interval_s: float = 2.0
+    cooldown_s: float = 4.0
+    provision_s: float = 5.0
+
+    def __post_init__(self):
+        if not 1 <= self.min_replicas <= self.max_replicas:
+            raise ValueError(
+                f"need 1 <= min_replicas={self.min_replicas} <= "
+                f"max_replicas={self.max_replicas}")
+        if self.scale_down_queue >= self.scale_up_queue:
+            raise ValueError(
+                f"scale_down_queue={self.scale_down_queue} must be below "
+                f"scale_up_queue={self.scale_up_queue} (the hysteresis gap)")
+        if self.interval_s <= 0:
+            raise ValueError("interval_s must be positive")
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """A replica fleet: how many engine instances, routed and scaled how.
+
+    ``replicas`` engine instances run the workload's policy behind
+    ``router``; a non-None ``autoscaler`` turns ``replicas`` into the
+    *initial* active count (clamped to its [min, max]) with standbys up to
+    ``max_replicas``.  ``prefill_replicas > 0`` disaggregates at the fleet
+    level: arrivals prefill on that many dedicated prefill replicas
+    (admission ``prefill_batch``), then migrate — paying ``transfer_s`` of
+    KV-transfer latency — to the least-loaded decode replica.
+
+    The default is :meth:`trivial`: exactly the single-replica simulator,
+    so every existing serving spec is already a fleet spec.
+    """
+    replicas: int = 1
+    router: RouterSpec = RouterSpec()
+    autoscaler: AutoscalerSpec | None = None
+    prefill_replicas: int = 0
+    prefill_batch: int = 4
+    transfer_s: float = 0.002
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {self.replicas}")
+        if self.prefill_replicas < 0:
+            raise ValueError("prefill_replicas must be >= 0")
+        if self.prefill_replicas > 0 and self.prefill_batch < 1:
+            raise ValueError("prefill_batch must be >= 1")
+
+    @property
+    def trivial(self) -> bool:
+        """True when this fleet is exactly one plain replica — the single-
+        replica event loop handles it without the fleet layer."""
+        return (self.replicas == 1 and self.prefill_replicas == 0
+                and self.autoscaler is None)
+
+
 def _default_prompt():
     from repro.serving.sim.workload import LengthDist
     return LengthDist("lognormal", median=512.0, sigma=0.7, cap=4096)
@@ -155,9 +253,16 @@ class ServingWorkload:
     mode: str = field(default="serving", init=False)
     n_requests: int = 200
     arrival: str = "poisson"        # poisson | uniform | bursty
+                                    # | diurnal | flash_crowd
     rate_rps: float = 8.0
     burst_factor: float = 4.0
     switch_prob: float = 0.1
+    period_s: float = 600.0         # diurnal: one day, compressed
+    diurnal_amp: float = 0.8        # diurnal: rate swings rate*(1 +/- amp)
+    flash_start_s: float = 60.0     # flash_crowd: spike onset
+    flash_dur_s: float = 30.0       # flash_crowd: spike duration
+    flash_mult: float = 8.0         # flash_crowd: rate multiplier in spike
+    sessions: int = 0               # >0: tag requests with session ids
     prompt: object = field(default_factory=_default_prompt)    # LengthDist
     output: object = field(default_factory=_default_output)    # LengthDist
     seed: int = 0
@@ -167,6 +272,7 @@ class ServingWorkload:
     max_batch: int = 32
     token_budget: int = 256         # chunked-prefill budget
     ctx_floor: int = 256            # oracle context-bucket floor
+    fleet: FleetSpec = FleetSpec()  # replica pool / router / autoscaler
 
     def build(self):
         """Materialize the deterministic request trace (a ``Workload``)."""
@@ -176,7 +282,13 @@ class ServingWorkload:
         return synthesize(self.n_requests, arrival=self.arrival,
                           rate_rps=self.rate_rps,
                           burst_factor=self.burst_factor,
-                          switch_prob=self.switch_prob, prompt=self.prompt,
+                          switch_prob=self.switch_prob,
+                          period_s=self.period_s,
+                          diurnal_amp=self.diurnal_amp,
+                          flash_start_s=self.flash_start_s,
+                          flash_dur_s=self.flash_dur_s,
+                          flash_mult=self.flash_mult,
+                          sessions=self.sessions, prompt=self.prompt,
                           output=self.output, seed=self.seed)
 
     def make_policy(self, max_batch: int | None = None):
@@ -190,7 +302,9 @@ class ServingWorkload:
         from repro.serving.sim.sim import ServingScenario
         return ServingScenario(self.build(), slo=self.slo, policy=self.policy,
                                token_budget=self.token_budget,
-                               ctx_floor=self.ctx_floor)
+                               ctx_floor=self.ctx_floor,
+                               fleet=None if self.fleet.trivial
+                               else self.fleet)
 
 
 STEP_WORKLOADS = {"train": TrainWorkload, "prefill": PrefillWorkload,
@@ -240,7 +354,10 @@ class SimSpec:
         return self.workload.mode
 
     def B_local(self) -> int:
-        """Per-replica batch after the data-parallel split."""
+        """Per-replica batch after the data-parallel split.  Serving specs
+        have no global batch; the policy's admission cap plays that role."""
+        if self.mode == "serving":
+            return self.workload.max_batch
         dp = max(self.parallel.dp * self.parallel.pods, 1)
         return max(self.workload.global_batch // dp, 1)
 
@@ -249,8 +366,12 @@ class SimSpec:
         them — the shape part of the traced-graph identity.  Single source
         of truth for :meth:`reuse_key` and the sweep's worker sharding
         (``repro.api.sweep._shard_items``): the two must agree or workers
-        duplicate JAX traces."""
+        duplicate JAX traces.  A serving spec prices many bucketed shapes
+        through its oracle; the admission cap and context floor bound that
+        bucket family, so they stand in as its shape identity."""
         w = self.workload
+        if w.mode == "serving":
+            return (w.max_batch, w.ctx_floor, -1)
         seq = w.seq_len if w.mode != "decode" else 1
         cache = w.cache_len or (w.seq_len if w.mode == "decode" else 0)
         return (self.B_local(), seq, cache)
@@ -264,7 +385,8 @@ class SimSpec:
         remat = getattr(w, "remat", "none") if w.mode == "train" else "none"
         return (self.cluster.hardware, self.model.name, w.mode,
                 self.parallel.shard_key()) + self.trace_shapes() + (
-                w.fusion, w.quantize or "", remat)
+                getattr(w, "fusion", False), getattr(w, "quantize", None)
+                or "", remat)
 
     # ------------------------------------------------------------------
     def asdict(self) -> dict:
@@ -289,6 +411,13 @@ class SimSpec:
             w["prompt"] = LengthDist(**w["prompt"])
             w["output"] = LengthDist(**w["output"])
             w["slo"] = SLO(**w["slo"])
+            fl = dict(w.get("fleet") or {})
+            if fl:
+                fl["router"] = RouterSpec(**fl.get("router", {}))
+                scaler = fl.get("autoscaler")
+                fl["autoscaler"] = (AutoscalerSpec(**scaler)
+                                    if scaler is not None else None)
+                w["fleet"] = FleetSpec(**fl)
             workload = ServingWorkload(**w)
         else:
             workload = STEP_WORKLOADS[mode](**w)

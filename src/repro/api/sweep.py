@@ -43,33 +43,54 @@ _ALIASES = {"batch": "workload.global_batch", "micro": "parallel.microbatches",
 _COMPONENTS = ("parallel", "workload", "cluster", "model")
 
 
-def _resolve_axis(spec: SimSpec, name: str) -> tuple[str, str]:
-    """Axis name -> (component, field).  Dotted paths are explicit; bare
-    names search parallel -> workload -> cluster -> model."""
+def _resolve_axis(spec: SimSpec, name: str) -> tuple[str, ...]:
+    """Axis name -> (component, field, ...) path.  Dotted paths are explicit
+    and may reach into nested spec objects (``workload.fleet.replicas``);
+    bare names search parallel -> workload -> cluster -> model."""
     name = _ALIASES.get(name, name)
     if "." in name:
-        comp, f = name.split(".", 1)
+        comp, rest = name.split(".", 1)
         if comp not in _COMPONENTS:
             raise KeyError(f"unknown spec component {comp!r} in axis {name!r}")
-        if f not in {x.name for x in dataclasses.fields(getattr(spec, comp))}:
-            raise KeyError(f"{type(getattr(spec, comp)).__name__} has no "
-                           f"field {f!r} (axis {name!r})")
-        return comp, f
+        obj = getattr(spec, comp)
+        parts = rest.split(".")
+        for i, f in enumerate(parts):
+            if not dataclasses.is_dataclass(obj) or f not in {
+                    x.name for x in dataclasses.fields(obj)}:
+                raise KeyError(f"{type(obj).__name__} has no field {f!r} "
+                               f"(axis {name!r})")
+            if i < len(parts) - 1:
+                obj = getattr(obj, f)
+                if obj is None:
+                    raise KeyError(
+                        f"axis {name!r} descends through a None field — set "
+                        f"a non-None default on the base spec (or sweep "
+                        f"{'.'.join([comp] + parts[:i + 1])!r} as whole "
+                        "objects)")
+        return (comp, *parts)
     for comp in _COMPONENTS:
         obj = getattr(spec, comp)
         if name in {x.name for x in dataclasses.fields(obj)}:
-            return comp, name
+            return (comp, name)
     raise KeyError(f"axis {name!r} matches no field of any spec component")
+
+
+def _nested_replace(obj, path: tuple, value):
+    """``dataclasses.replace`` along a field path, rebuilding each frozen
+    level from the inside out."""
+    if len(path) == 1:
+        return dataclasses.replace(obj, **{path[0]: value})
+    inner = _nested_replace(getattr(obj, path[0]), path[1:], value)
+    return dataclasses.replace(obj, **{path[0]: inner})
 
 
 def spec_replace(spec: SimSpec, changes: dict) -> SimSpec:
     """Rebuild a spec with dotted-path (or bare-name) field changes."""
-    per_comp: dict[str, dict] = {}
+    parts: dict[str, object] = {}
     for name, value in changes.items():
-        comp, f = _resolve_axis(spec, name)
-        per_comp.setdefault(comp, {})[f] = value
-    parts = {comp: dataclasses.replace(getattr(spec, comp), **kw)
-             for comp, kw in per_comp.items()}
+        comp, *path = _resolve_axis(spec, name)
+        parts[comp] = _nested_replace(parts.get(comp, getattr(spec, comp)),
+                                      tuple(path), value)
     return dataclasses.replace(spec, **parts)
 
 
@@ -159,6 +180,27 @@ def _merge_stats(deltas: list[dict]) -> dict:
     return out
 
 
+def _serving_probe(spec: SimSpec) -> SimSpec:
+    """The steady-state spec a serving candidate is step-probed with: one
+    replica's decode iteration at the policy's admission cap and the
+    oracle's context floor, bucketed exactly like the oracle buckets it —
+    so the probe's priced report is the first entry of the serving run's
+    own step table (shared through the SimCache), and it carries the memory
+    footprint the post-simulation ``memory_limit`` filter needs."""
+    from repro.api.spec import Cluster, DecodeWorkload
+    from repro.serving.sim.oracle import pow2_bucket
+    w = spec.workload
+    ctx = pow2_bucket(w.ctx_floor)
+    return SimSpec(
+        model=spec.model,
+        cluster=Cluster(spec.cluster.resolve(),
+                        memory_limit=spec.cluster.memory_limit),
+        parallel=dataclasses.replace(spec.parallel, dp=1, pods=1,
+                                     microbatches=1),
+        workload=DecodeWorkload(global_batch=pow2_bucket(w.max_batch),
+                                seq_len=ctx, cache_len=ctx))
+
+
 def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
               objective: str, scenario, persist: str | None = None) -> list:
     """Evaluate ``(idx, spec, cand)`` triples in order; returns
@@ -172,7 +214,8 @@ def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
         # run: the collectives memo is process-global, not zero at birth
         if spec.cluster.hardware not in stats0:
             stats0[spec.cluster.hardware] = s.cache_stats()
-        rep = s.run(spec)
+        serving_mode = spec.workload.mode == "serving"
+        rep = s.run(_serving_probe(spec) if serving_mode else spec)
         res = EvalResult(cand, rep, spec=spec)
         limit = spec.cluster.memory_limit
         if limit and rep.memory and rep.memory.total > limit:
@@ -183,7 +226,7 @@ def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
     if objective == "goodput":
         # deferred import: repro.serving pulls the real-model serving stack,
         # which the step-time-only path never needs
-        from repro.serving.sim import ServingScenario
+        from repro.serving.sim import ServingScenario, ServingSimulator
         if scenario is None:
             scenario = ServingScenario.default()
         elif isinstance(scenario, ServingWorkload):
@@ -192,7 +235,13 @@ def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
             if res.pruned:
                 continue
             s = _sim_for(res.spec.cluster, sims, engine, persist)
-            res.serving = scenario.evaluate(s, res.spec.model, res.cand)
+            if res.spec.workload.mode == "serving":
+                # the spec IS the scenario: trace, SLO, policy and fleet all
+                # come from the ServingWorkload (FleetReports are system-
+                # level — EvalResult.goodput_rps passes them through)
+                res.serving = ServingSimulator(s).run(res.spec)
+            else:
+                res.serving = scenario.evaluate(s, res.spec.model, res.cand)
     return results
 
 
@@ -226,8 +275,13 @@ def _shard_items(items: list, workers: int) -> list[list]:
     pure function of the candidate list, so the shard layout — and thus
     every worker-local cache interaction — is reproducible."""
     def trace_key(spec: SimSpec) -> tuple:
+        # serving candidates sharing a bucket family would all land on one
+        # worker (their trace shapes are identical by design), yet their
+        # cost is the Python event loop, not JAX traces — spread them by
+        # full workload identity instead
+        extra = (spec.workload,) if spec.workload.mode == "serving" else ()
         return (spec.cluster.hardware, spec.model,
-                spec.workload.mode) + spec.trace_shapes()
+                spec.workload.mode) + spec.trace_shapes() + extra
 
     clusters: dict[tuple, list] = {}
     for item in items:
@@ -239,11 +293,61 @@ def _shard_items(items: list, workers: int) -> list[list]:
     return [s for s in shards if s]
 
 
+def _write_manifest(path: str, space: SweepSpace,
+                    result: ExplorationResult) -> None:
+    """Sweep provenance: the space, every candidate's full spec JSON (keyed
+    by :meth:`~repro.api.spec.SimSpec.json_hash`), its outcome, and the
+    final ranking — enough to re-run or audit any row without the process
+    that produced it."""
+    import json
+
+    def row(res: EvalResult, rank: dict) -> dict:
+        h = res.spec.json_hash()
+        return {
+            "json_hash": h,
+            "spec": json.loads(res.spec.to_json()),
+            "pruned": res.pruned,
+            "reason": res.reason or None,
+            "step_time_us": (round(res.report.step_time_us, 3)
+                             if res.report is not None else None),
+            "goodput_rps": (round(res.goodput_rps, 4)
+                            if res.serving is not None else None),
+            "rank": rank.get(h),
+        }
+
+    try:
+        ranking = [r.spec.json_hash() for r in result.ranked()]
+    except ValueError:        # mixed objectives: manifest still records rows
+        ranking = []
+    rank = {h: i for i, h in enumerate(ranking)}
+    doc = {
+        "kind": "charon-sweep-manifest",
+        "version": 1,
+        "base_hash": space.base.json_hash(),
+        "base": json.loads(space.base.to_json()),
+        "axes": {name: list(vals) for name, vals in space.axes},
+        "objective": result.objective,
+        "workers": result.workers,
+        "wall_time_s": round(result.wall_time_s, 3),
+        "n_evaluated": len(result.evaluated),
+        "n_pruned": len(result.pruned),
+        "ranking": ranking,
+        "candidates": [row(r, rank)
+                       for r in result.evaluated + result.pruned],
+    }
+    with open(path, "w") as f:
+        # default=str absorbs non-JSON axis values (HardwareSpec and
+        # friends) the same way the spec's own serializer names them
+        json.dump(doc, f, indent=1, sort_keys=True, default=str)
+        f.write("\n")
+
+
 def sweep(space: SweepSpace, *, sim: Simulator | None = None,
           engine: str = "analytical", rules: list[Callable] | None = None,
           max_evals: int = 10_000, objective: str = "step_time",
           scenario=None, workers: int = 1, persist: str | None = None,
-          mp_context: str = "spawn") -> ExplorationResult:
+          mp_context: str = "spawn",
+          manifest: str | None = None) -> ExplorationResult:
     """Enumerate, prune, simulate and rank every spec in ``space``.
 
     ``sim`` seeds the per-hardware simulator registry (its caches stay warm
@@ -255,6 +359,14 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
     :class:`~repro.serving.sim.ServingScenario`, a
     :class:`~repro.api.spec.ServingWorkload`, or None for the default.
 
+    A :class:`~repro.api.spec.ServingWorkload` *base* (goodput objective
+    only) sweeps the request-level simulator itself: each candidate replays
+    the spec's own trace/SLO/policy — including its
+    :class:`~repro.api.spec.FleetSpec`, so ``workload.fleet.replicas`` or
+    ``workload.fleet.prefill_replicas`` are axes like any other — and is
+    step-probed once (one bucketed decode iteration) for the memory filter
+    and ranking tie-breaks.
+
     ``workers > 1`` shards candidate groups by reuse/trace key over that
     many OS processes (``mp_context``, default spawn); results, rankings and
     pruned reasons are bit-identical to the serial sweep, with the merged
@@ -262,25 +374,38 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
     evaluation in that case (worker processes own their simulators); pass
     ``persist=`` (a directory) to warm-start every worker from — and let
     serial sweeps save to — the on-disk cache tier instead.
+
+    ``manifest=`` (a file path) writes a JSON provenance record after the
+    sweep: the space, every candidate's full spec (keyed by its
+    ``json_hash``), pruned reasons, objective values and the final ranking.
     """
     if objective not in ("step_time", "goodput"):
         raise ValueError(f"unknown objective {objective!r}")
-    if isinstance(space.base.workload, ServingWorkload):
+    serving_base = isinstance(space.base.workload, ServingWorkload)
+    if serving_base and objective != "goodput":
         raise TypeError(
-            "sweep() needs a steady-state base workload (Train/Prefill/"
-            "Decode); pass the ServingWorkload as scenario= with "
-            "objective='goodput' instead")
+            "a ServingWorkload base sweeps the request-level simulator — "
+            "pass objective='goodput' (step_time needs a steady-state "
+            "Train/Prefill/Decode workload)")
+    if serving_base and scenario is not None:
+        raise TypeError(
+            "a ServingWorkload base carries its own trace/SLO/policy; "
+            "scenario= would be ignored — drop one of the two")
     rules = list(DEFAULT_RULES if rules is None else rules)
     t0 = time.time()
     coll0 = collective_memo_stats().as_dict()
     pruned: list[EvalResult] = []
     cands: list[tuple[SimSpec, Candidate]] = []
     for spec in space.points():
-        cand = Candidate(spec.parallel, spec.workload.global_batch)
+        w = spec.workload
+        cand = Candidate(spec.parallel, getattr(w, "global_batch", None)
+                         or w.max_batch)
         reason = next((r for rule in rules
                        if (r := rule(spec.model, cand))), None)
-        if reason is None and spec.cluster.memory_limit:
-            w = spec.workload
+        if reason is None and spec.cluster.memory_limit \
+                and w.mode != "serving":
+            # serving specs have no single step shape for the closed-form
+            # bound; the probe's full memory report post-filters them
             fit = rule_memory_fit(spec.cluster.memory_limit, mode=w.mode,
                                   seq_len=w.seq_len, cache_len=w.cache_len)
             reason = fit(spec.model, cand)
@@ -325,31 +450,34 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
             (pruned if res.pruned else evaluated).append(res)
         wall = time.time() - t0
         merged["collectives"] = coll
-        return ExplorationResult(
+        result = ExplorationResult(
             evaluated, pruned, wall, n_groups=n_groups,
             configs_per_sec=(len(items) / wall) if wall > 0 else 0.0,
             cache_stats=merged, objective=objective, workers=workers)
+    else:
+        sims: dict[str, Simulator] = {}
+        if sim is not None:
+            sims[sim.hw.name] = sim
+        stats0 = {k: s.cache_stats() for k, s in sims.items()}
+        evaluated = []
+        for _, res in _evaluate(items, sims, stats0, engine, objective,
+                                scenario, persist):
+            (pruned if res.pruned else evaluated).append(res)
+        if persist:
+            for s in sims.values():
+                s.save_cache()
 
-    sims: dict[str, Simulator] = {}
-    if sim is not None:
-        sims[sim.hw.name] = sim
-    stats0 = {k: s.cache_stats() for k, s in sims.items()}
-    evaluated = []
-    for _, res in _evaluate(items, sims, stats0, engine, objective,
-                            scenario, persist):
-        (pruned if res.pruned else evaluated).append(res)
-    if persist:
-        for s in sims.values():
-            s.save_cache()
-
-    wall = time.time() - t0
-    deltas = [_stats_delta(s.cache_stats(), stats0.get(k, {}))
-              for k, s in sims.items()]
-    merged = _merge_stats(deltas)
-    coll1 = collective_memo_stats().as_dict()
-    merged["collectives"] = {k: coll1[k] - coll0[k]
-                             for k in ("hits", "misses")}
-    return ExplorationResult(
-        evaluated, pruned, wall, n_groups=n_groups,
-        configs_per_sec=(len(items) / wall) if wall > 0 else 0.0,
-        cache_stats=merged, objective=objective)
+        wall = time.time() - t0
+        deltas = [_stats_delta(s.cache_stats(), stats0.get(k, {}))
+                  for k, s in sims.items()]
+        merged = _merge_stats(deltas)
+        coll1 = collective_memo_stats().as_dict()
+        merged["collectives"] = {k: coll1[k] - coll0[k]
+                                 for k in ("hits", "misses")}
+        result = ExplorationResult(
+            evaluated, pruned, wall, n_groups=n_groups,
+            configs_per_sec=(len(items) / wall) if wall > 0 else 0.0,
+            cache_stats=merged, objective=objective)
+    if manifest:
+        _write_manifest(manifest, space, result)
+    return result

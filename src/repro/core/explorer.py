@@ -72,10 +72,14 @@ class EvalResult:
 
     @property
     def goodput_rps(self) -> float:
-        """System-level SLO-attainment goodput: the per-replica serving
-        result scaled by the candidate's replica count."""
+        """System-level SLO-attainment goodput.  A per-replica serving
+        result is scaled by the candidate's replica count; a fleet result
+        (``system_level`` reports, e.g. ``FleetReport``) already aggregates
+        over its replicas and is passed through unscaled."""
         if self.serving is None:
             return 0.0
+        if getattr(type(self.serving), "system_level", False):
+            return self.serving.goodput_rps
         replicas = max(self.cand.par.dp * self.cand.par.pods, 1)
         return self.serving.goodput_rps * replicas
 
@@ -185,7 +189,8 @@ class ExplorationResult:
                     "goodput ranking needs sweep(objective='goodput')")
             return sorted(self.evaluated,
                           key=lambda r: (-r.goodput_rps,
-                                         r.report.step_time_us))
+                                         r.report.step_time_us
+                                         if r.report else 0.0))
         if objective == "step_time":
             return sorted(self.evaluated,
                           key=lambda r: (r.report.step_time_us,

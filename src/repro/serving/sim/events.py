@@ -1,10 +1,12 @@
 """Discrete-event core: a time-ordered queue with deterministic ties.
 
-Two event kinds drive the serving simulation: request ``ARRIVAL`` into a
+Three event kinds drive the serving simulation: request ``ARRIVAL`` into a
 pool's queue (from the workload, or from a prefill pool migrating a request
-to its decode pool) and ``STEP_DONE`` (an engine iteration priced by the
-step oracle completes).  Ties at equal timestamps break by insertion order
-(a monotone sequence number), so runs are bit-reproducible.
+to its decode pool), ``STEP_DONE`` (an engine iteration priced by the
+step oracle completes), and — fleet runs only — ``AUTOSCALE`` (the
+autoscaler samples queue depths and may grow or shrink the serving set).
+Ties at equal timestamps break by insertion order (a monotone sequence
+number), so runs are bit-reproducible.
 """
 from __future__ import annotations
 
@@ -13,6 +15,7 @@ from dataclasses import dataclass, field
 
 ARRIVAL = "arrival"
 STEP_DONE = "step_done"
+AUTOSCALE = "autoscale"
 
 
 @dataclass(frozen=True)

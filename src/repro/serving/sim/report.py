@@ -4,12 +4,15 @@
 ``Report``: instead of one steady-state step time it carries the TTFT/TPOT/
 end-to-end *distributions* a deployment decision actually hinges on, plus
 SLO-attainment goodput — the objective the explorer can rank parallelism
-configs by (``sweep(..., objective="goodput")``).
+configs by (``sweep(..., objective="goodput")``).  ``FleetReport`` is the
+same thing one level up: per-replica ``ServingReport``s plus fleet-wide
+distributions, replica utilization and the autoscaler trace.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import ClassVar
 
 
 @dataclass(frozen=True)
@@ -107,6 +110,9 @@ class ServingReport:
             steps_by_kind=steps_by_kind, utilization=util,
             oracle_stats=oracle_stats, requests=list(reqs))
 
+    # per-replica serving results are replica-level; FleetReport overrides
+    system_level: ClassVar[bool] = False
+
     def summary(self) -> dict:
         """Flat dict for benchmarks / examples."""
         return {
@@ -125,5 +131,123 @@ class ServingReport:
             "n_steps": self.n_steps,
             "steps_by_kind": dict(self.steps_by_kind),
             "utilization": self.utilization,
+            "oracle_stats": self.oracle_stats,
+        }
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class FleetReport:
+    """Aggregate result of one workload replay through a replica fleet.
+
+    Fleet-wide percentiles/goodput are computed over the union of every
+    replica's finished requests against the fleet makespan, so they equal a
+    hand-merge of the per-replica :class:`ServingReport`s (asserted in
+    tests/test_fleet_sim.py).  ``goodput_rps`` is therefore *system-level*
+    already — the explorer must not multiply it by a replica count the way
+    it scales per-replica serving results (``system_level`` flags that).
+    """
+    n_requests: int
+    makespan_s: float
+    ttft_s: Percentiles
+    tpot_ms: Percentiles
+    e2e_s: Percentiles
+    queue_delay_s: Percentiles
+    prompt_tokens: int
+    output_tokens: int
+    tokens_per_s: float
+    output_tokens_per_s: float
+    requests_per_s: float
+    slo: SLO | None
+    slo_attainment: float
+    goodput_rps: float
+    n_steps: int
+    steps_by_kind: dict
+    router: str
+    n_replicas: int                      # replicas constructed (incl. standby)
+    replicas: list = field(default_factory=list)   # per-replica ServingReports
+    replica_requests: dict = field(default_factory=dict)  # r<idx> -> n finished
+    replica_utilization: dict = field(default_factory=dict)  # r<idx>/<pool>
+    autoscaler_trace: list = field(default_factory=list)
+    oracle_stats: dict = field(default_factory=dict)
+    requests: list = field(default_factory=list)
+
+    system_level: ClassVar[bool] = True
+
+    @staticmethod
+    def build(finished_by: list, replicas: list, slo: SLO | None, router: str,
+              autoscaler_trace: list, oracle_stats: dict) -> "FleetReport":
+        """Merge per-replica finished-request lists into the fleet view.
+
+        ``finished_by[i]`` holds the requests that *finished* on
+        ``replicas[i]`` (disaggregated fleets attribute a request to its
+        decode replica).  The per-replica :class:`ServingReport`s are built
+        exactly as a standalone single-replica run would build them — same
+        pool names, own makespan — which is what makes the round-robin
+        fleet bit-identical to per-shard single runs.
+        """
+        per = [ServingReport.build(reqs, rep.pools, slo, {})
+               for rep, reqs in zip(replicas, finished_by)]
+        reqs = [r for chunk in finished_by for r in chunk]
+        t0 = min((r.arrival_s for r in reqs), default=0.0)
+        t1 = max((r.finished_s for r in reqs), default=0.0)
+        makespan = max(t1 - t0, 1e-12)
+        prompt_toks = sum(r.prompt_len for r in reqs)
+        out_toks = sum(r.output_len for r in reqs)
+        attain = (sum(1 for r in reqs if slo.met(r)) / len(reqs)
+                  if slo and reqs else 1.0)
+        rps = len(reqs) / makespan
+        steps_by_kind: dict[str, int] = {}
+        util: dict[str, dict] = {}
+        for rep in replicas:
+            for p in rep.pools:
+                for k, n in p.steps_by_kind.items():
+                    steps_by_kind[k] = steps_by_kind.get(k, 0) + n
+                u = {"busy_frac": round(p.busy_s / makespan, 4),
+                     "steps": p.n_steps}
+                for k, s in p.phase_s.items():
+                    u[f"{k}_frac"] = round(s / makespan, 4)
+                util[f"r{rep.index}/{p.name}"] = u
+        return FleetReport(
+            n_requests=len(reqs), makespan_s=makespan,
+            ttft_s=Percentiles.of([r.ttft_s for r in reqs]),
+            tpot_ms=Percentiles.of([r.tpot_ms for r in reqs]),
+            e2e_s=Percentiles.of([r.e2e_s for r in reqs]),
+            queue_delay_s=Percentiles.of([r.queue_delay_s for r in reqs]),
+            prompt_tokens=prompt_toks, output_tokens=out_toks,
+            tokens_per_s=(prompt_toks + out_toks) / makespan,
+            output_tokens_per_s=out_toks / makespan,
+            requests_per_s=rps, slo=slo, slo_attainment=attain,
+            goodput_rps=attain * rps,
+            n_steps=sum(p.n_steps for rep in replicas for p in rep.pools),
+            steps_by_kind=steps_by_kind, router=router,
+            n_replicas=len(replicas), replicas=per,
+            replica_requests={f"r{rep.index}": len(chunk)
+                              for rep, chunk in zip(replicas, finished_by)},
+            replica_utilization=util,
+            autoscaler_trace=list(autoscaler_trace),
+            oracle_stats=oracle_stats, requests=reqs)
+
+    def summary(self) -> dict:
+        """Flat dict for benchmarks / examples."""
+        return {
+            "n_requests": self.n_requests,
+            "n_replicas": self.n_replicas,
+            "router": self.router,
+            "makespan_s": round(self.makespan_s, 3),
+            "ttft_p50_s": round(self.ttft_s.p50, 4),
+            "ttft_p99_s": round(self.ttft_s.p99, 4),
+            "tpot_p50_ms": round(self.tpot_ms.p50, 3),
+            "tpot_p99_ms": round(self.tpot_ms.p99, 3),
+            "queue_delay_p50_s": round(self.queue_delay_s.p50, 4),
+            "tokens_per_s": round(self.tokens_per_s, 1),
+            "output_tokens_per_s": round(self.output_tokens_per_s, 1),
+            "requests_per_s": round(self.requests_per_s, 3),
+            "slo_attainment": round(self.slo_attainment, 4),
+            "goodput_rps": round(self.goodput_rps, 3),
+            "n_steps": self.n_steps,
+            "steps_by_kind": dict(self.steps_by_kind),
+            "replica_requests": dict(self.replica_requests),
+            "autoscaler_actions": len(self.autoscaler_trace),
             "oracle_stats": self.oracle_stats,
         }

@@ -30,13 +30,14 @@ from dataclasses import dataclass, field
 from repro.configs.base import ModelConfig
 from repro.core.passes.base import ParallelConfig
 from repro.core.simulator import Simulator
-from repro.serving.sim.events import ARRIVAL, STEP_DONE, EventQueue
+from repro.serving.sim.events import ARRIVAL, AUTOSCALE, STEP_DONE, EventQueue
 from repro.serving.sim.oracle import StepOracle
 from repro.serving.sim.policies import (
     ContinuousBatching, DecodeOnly, DisaggregatedPD, PrefillOnly, StepPlan,
     make_policy,
 )
-from repro.serving.sim.report import SLO, ServingReport
+from repro.serving.sim.report import SLO, FleetReport, ServingReport
+from repro.serving.sim.router import Autoscaler, LeastLoadedRouter, make_router
 from repro.serving.sim.workload import SimRequest, Workload, synthesize
 
 
@@ -57,6 +58,34 @@ class Pool:
     n_steps: int = 0
 
 
+def make_pools(policy) -> tuple[list[Pool], float]:
+    """Policy -> the pool(s) one engine replica runs: a DisaggregatedPD
+    descriptor expands into a prefill/decode pair (plus its KV-transfer
+    latency), anything else is a single ``engine`` pool.  Shared by the
+    single-replica and fleet simulators so per-replica pool names — and
+    therefore utilization keys — match between the two."""
+    if isinstance(policy, DisaggregatedPD):
+        return [Pool("prefill", PrefillOnly(policy.prefill_batch),
+                     role="prefill"),
+                Pool("decode", DecodeOnly(policy.decode_batch),
+                     role="decode")], policy.transfer_s
+    return [Pool("engine", policy)], 0.0
+
+
+def price_step_s(oracle: StepOracle, plan: StepPlan) -> float:
+    """Price one planned engine iteration through the shared step oracle —
+    the single pricing convention both simulators use."""
+    if plan.kind == "decode":
+        ctx = max(r.prompt_len + r.decoded for r in plan.decode)
+        return oracle.decode_step_s(len(plan.decode), ctx)
+    if plan.kind == "prefill":
+        seq = max(chunk for _, chunk in plan.prefill)
+        return oracle.prefill_s(len(plan.prefill), seq)
+    ctx = max((r.prompt_len + r.decoded for r in plan.decode), default=0)
+    chunk = sum(c for _, c in plan.prefill)
+    return oracle.mixed_step_s(len(plan.decode), ctx, chunk)
+
+
 class ServingSimulator:
     """Replay a :class:`Workload` through a batching policy, pricing every
     engine iteration with the step oracle."""
@@ -75,24 +104,10 @@ class ServingSimulator:
 
     # ------------------------------------------------------------------
     def _pools(self) -> tuple[list[Pool], float]:
-        p = self.policy
-        if isinstance(p, DisaggregatedPD):
-            return [Pool("prefill", PrefillOnly(p.prefill_batch), role="prefill"),
-                    Pool("decode", DecodeOnly(p.decode_batch), role="decode")], \
-                p.transfer_s
-        return [Pool("engine", p)], 0.0
+        return make_pools(self.policy)
 
     def _price_s(self, plan: StepPlan) -> float:
-        o = self.oracle
-        if plan.kind == "decode":
-            ctx = max(r.prompt_len + r.decoded for r in plan.decode)
-            return o.decode_step_s(len(plan.decode), ctx)
-        if plan.kind == "prefill":
-            seq = max(chunk for _, chunk in plan.prefill)
-            return o.prefill_s(len(plan.prefill), seq)
-        ctx = max((r.prompt_len + r.decoded for r in plan.decode), default=0)
-        chunk = sum(c for _, c in plan.prefill)
-        return o.mixed_step_s(len(plan.decode), ctx, chunk)
+        return price_step_s(self.oracle, plan)
 
     def _finish_step(self, pool: Pool, plan: StepPlan, now: float,
                      evq: EventQueue, pools: list[Pool], transfer_s: float,
@@ -126,7 +141,10 @@ class ServingSimulator:
         Accepts either a legacy :class:`Workload` (with the policy/model
         fixed at construction) or a :class:`~repro.api.spec.SimSpec` whose
         workload is a :class:`~repro.api.spec.ServingWorkload` — the spec
-        then supplies the model, parallelism, policy, trace and SLO.
+        then supplies the model, parallelism, policy, trace and SLO.  A
+        spec whose workload carries a non-trivial
+        :class:`~repro.api.spec.FleetSpec` is delegated to
+        :class:`FleetSimulator` and returns a :class:`FleetReport`.
         """
         from repro.api.spec import SimSpec
         if isinstance(workload, SimSpec):
@@ -141,6 +159,9 @@ class ServingSimulator:
                 raise ValueError(
                     f"simulator built for {self.sim.hw.name!r} cannot run a "
                     f"spec for cluster hardware {spec.cluster.hardware!r}")
+            if not w.fleet.trivial:
+                return FleetSimulator(self.sim).run(spec, slo=slo,
+                                                    max_steps=max_steps)
             inner = ServingSimulator(self.sim, spec.model, par=spec.parallel,
                                      policy=w.make_policy(),
                                      ctx_floor=w.ctx_floor)
@@ -214,6 +235,272 @@ class ServingSimulator:
 
 # ----------------------------------------------------------------------
 @dataclass
+class ReplicaPool:
+    """One replica of a fleet: an engine instance (a single pool, or a
+    prefill/decode pool pair when the per-replica policy is
+    :class:`DisaggregatedPD`), plus routability state.
+
+    ``active`` gates routing only — a scaled-down replica keeps draining
+    the requests it already holds, so request conservation never depends on
+    autoscaler behaviour.  ``ready_at`` models provisioning: a freshly
+    scaled-up replica takes traffic once the clock passes it.
+    """
+    index: int
+    pools: list
+    transfer_s: float = 0.0
+    role: str = "serve"                  # serve | prefill (fleet-level disagg)
+    active: bool = True
+    ready_at: float = 0.0
+
+    @property
+    def entry(self) -> Pool:
+        return self.pools[0]
+
+    def load(self) -> int:
+        """In-flight requests: queued + prefilling + decoding — the routing
+        and autoscaling depth metric."""
+        return sum(len(p.queue) + len(p.prefilling) + len(p.running)
+                   for p in self.pools)
+
+
+class FleetSimulator:
+    """Fleet-scale serving: N replica engines behind a router, sharing one
+    :class:`StepOracle`, on one deterministic event heap.
+
+    Each replica is an independent :class:`ReplicaPool` (identical model /
+    parallelism / policy — the fleet is homogeneous), so pricing goes
+    through a single oracle and the marginal cost of a replica is queue
+    bookkeeping, not JAX traces.  The router spreads fresh arrivals over
+    routable replicas; with ``FleetSpec.prefill_replicas > 0`` the fleet is
+    disaggregated — arrivals prefill on dedicated :class:`PrefillOnly`
+    replicas, then migrate (paying ``transfer_s``) to the least-loaded
+    decode replica.  An optional :class:`~repro.api.spec.AutoscalerSpec`
+    grows/shrinks the serving set on ``AUTOSCALE`` ticks.
+
+    Determinism matches the single-replica loop: seeded workloads, a
+    deterministic oracle, heap ties broken by insertion order, and routers/
+    autoscaler that are pure functions of fleet state.  Only the pools of
+    the replica an event touches are replanned, so fleet event-loop cost is
+    O(events), not O(events × replicas).
+    """
+
+    def __init__(self, sim: Simulator, cfg: ModelConfig | None = None, *,
+                 par: ParallelConfig | None = None, policy=None, fleet=None,
+                 oracle: StepOracle | None = None, ctx_floor: int = 256):
+        from repro.api.spec import FleetSpec
+        self.sim = sim
+        self.cfg = cfg
+        self.par = par or ParallelConfig()
+        self.policy = policy or ContinuousBatching()
+        self.fleet = fleet or FleetSpec()
+        self.oracle = oracle if cfg is None else (
+            oracle or StepOracle(sim, cfg, self.par, ctx_floor=ctx_floor))
+
+    # ------------------------------------------------------------------
+    def _replicas(self) -> tuple[list[ReplicaPool], list[ReplicaPool],
+                                 list[ReplicaPool]]:
+        """Build the fleet: (all, serve group, entry group).
+
+        With an autoscaler, ``max_replicas`` serve replicas exist up front
+        (construction is cheap — they share the oracle) and only the
+        initial count is active; scale-ups activate standbys in index
+        order, so replica identity is stable across the run.
+        """
+        import copy
+
+        f = self.fleet
+        scaler = f.autoscaler
+        n_active = f.replicas
+        n_total = f.replicas
+        if scaler is not None:
+            n_active = min(max(f.replicas, scaler.min_replicas),
+                           scaler.max_replicas)
+            n_total = max(n_total, scaler.max_replicas)
+        reps: list[ReplicaPool] = []
+        for i in range(n_total):
+            pools, transfer = make_pools(copy.deepcopy(self.policy))
+            reps.append(ReplicaPool(index=i, pools=pools, transfer_s=transfer,
+                                    active=i < n_active))
+        serve = list(reps)
+        if f.prefill_replicas > 0:
+            for _ in range(f.prefill_replicas):
+                pool = Pool("prefill", PrefillOnly(f.prefill_batch),
+                            role="prefill")
+                reps.append(ReplicaPool(index=len(reps), pools=[pool],
+                                        transfer_s=f.transfer_s,
+                                        role="prefill"))
+            # decode side of a disaggregated fleet: pure continuous decode
+            for rep in serve:
+                cap = getattr(self.policy, "max_batch",
+                              getattr(self.policy, "batch_size", 16))
+                rep.pools[:] = [Pool("decode", DecodeOnly(cap), role="decode")]
+        entry = [rep for rep in reps if rep.role == "prefill"] or serve
+        return reps, serve, entry
+
+    def _routable(self, group: list[ReplicaPool],
+                  now: float) -> list[ReplicaPool]:
+        up = [rep for rep in group if rep.active and now >= rep.ready_at]
+        # provisioning gap or everything scaled down: fall back rather than
+        # drop arrivals (min_replicas >= 1 makes the active set non-empty)
+        return up or [rep for rep in group if rep.active] or group
+
+    def _finish(self, rep: ReplicaPool, pool: Pool, plan: StepPlan,
+                now: float, evq: EventQueue, serve: list[ReplicaPool],
+                decode_router, finished_by: list[list]) -> None:
+        pool.busy = False
+        for r, chunk in plan.prefill:
+            r.prefilled += chunk
+            if r.prefilled >= r.prompt_len:
+                pool.prefilling.remove(r)
+                r.first_token_s = now       # prefill emits the first token
+                r.decoded = 1
+                if r.decoded >= r.output_len:
+                    r.finished_s = now
+                    finished_by[rep.index].append(r)
+                elif rep.role == "prefill":
+                    # fleet-level disaggregation: migrate to a decode replica
+                    target = decode_router.route(
+                        r, self._routable(serve, now), now)
+                    evq.push(now + rep.transfer_s, ARRIVAL,
+                             (target, target.entry, r))
+                elif pool.role == "prefill":
+                    # per-replica DisaggregatedPD: decode pool is a sibling
+                    evq.push(now + rep.transfer_s, ARRIVAL,
+                             (rep, rep.pools[1], r))
+                else:
+                    pool.running.append(r)
+        for r in plan.decode:
+            r.decoded += 1
+            if r.decoded >= r.output_len:
+                r.finished_s = now
+                pool.running.remove(r)
+                finished_by[rep.index].append(r)
+
+    # ------------------------------------------------------------------
+    def run(self, workload, *, slo: SLO | None = None,
+            max_steps: int = 50_000_000) -> FleetReport:
+        """Replay a trace through the fleet and aggregate a
+        :class:`FleetReport`.
+
+        Accepts a :class:`Workload` (fleet/policy fixed at construction) or
+        a :class:`~repro.api.spec.SimSpec` whose
+        :class:`~repro.api.spec.ServingWorkload` supplies model,
+        parallelism, policy, trace, SLO and :class:`FleetSpec` — the spec
+        form of "sweep disaggregation ratios × replica counts".
+        """
+        from repro.api.spec import SimSpec
+        if isinstance(workload, SimSpec):
+            spec = workload
+            w = spec.workload
+            if getattr(w, "mode", None) != "serving":
+                raise TypeError(
+                    "FleetSimulator.run(spec) needs a ServingWorkload; "
+                    f"got {type(w).__name__}")
+            if spec.cluster.hardware != self.sim.hw.name:
+                raise ValueError(
+                    f"simulator built for {self.sim.hw.name!r} cannot run a "
+                    f"spec for cluster hardware {spec.cluster.hardware!r}")
+            inner = FleetSimulator(self.sim, spec.model, par=spec.parallel,
+                                   policy=w.make_policy(), fleet=w.fleet,
+                                   ctx_floor=w.ctx_floor)
+            return inner.run(w.build(), slo=slo if slo is not None else w.slo,
+                             max_steps=max_steps)
+        if self.oracle is None:
+            raise TypeError("FleetSimulator was built without a model "
+                            "config; pass a SimSpec to run()")
+        f = self.fleet
+        reqs = sorted((r.reset_copy() for r in workload.requests),
+                      key=lambda r: r.arrival_s)
+        replicas, serve, entry = self._replicas()
+        router = make_router(f.router)
+        decode_router = LeastLoadedRouter()
+        scaler = Autoscaler(f.autoscaler) if f.autoscaler is not None else None
+        evq = EventQueue()
+        for r in reqs:
+            evq.push(r.arrival_s, ARRIVAL, (None, None, r))
+        if scaler is not None and reqs:
+            evq.push(reqs[0].arrival_s + f.autoscaler.interval_s,
+                     AUTOSCALE, ())
+        remaining = len(reqs)
+        finished_by: list[list[SimRequest]] = [[] for _ in replicas]
+        n_finished = 0
+        stats0 = self.oracle.stats()
+        steps = 0
+        while evq:
+            ev = evq.pop()
+            now = ev.time
+            rep = None
+            if ev.kind == ARRIVAL:
+                rep, pool, r = ev.payload
+                if rep is None:             # fresh arrival: route it now
+                    remaining -= 1
+                    rep = router.route(r, self._routable(entry, now), now)
+                    pool = rep.entry
+                    # fleet-wide drain signal for wait-for-gang policies:
+                    # per-replica arrival counts are unknowable under
+                    # load-dependent routing, so every entry pool sees the
+                    # fleet-wide undelivered count (conservative: a gang
+                    # waits a little longer, never deadlocks)
+                    for x in entry:
+                        x.entry.pending_arrivals = remaining
+                pool.queue.append(r)
+                if r.enqueue_s is None:
+                    r.enqueue_s = now
+            elif ev.kind == STEP_DONE:
+                rep, pool, plan = ev.payload
+                before = len(finished_by[rep.index])
+                self._finish(rep, pool, plan, now, evq, serve, decode_router,
+                             finished_by)
+                n_finished += len(finished_by[rep.index]) - before
+            else:                            # AUTOSCALE
+                scaler.tick(now, serve)
+                if remaining > 0 or n_finished < len(reqs):
+                    evq.push(now + f.autoscaler.interval_s, AUTOSCALE, ())
+            if rep is None:
+                continue
+            for pool in rep.pools:           # replan only the touched replica
+                if pool.busy:
+                    continue
+                plan = pool.policy.plan(pool, now)
+                if plan is None:
+                    continue
+                steps += 1
+                if steps > max_steps:
+                    raise RuntimeError(
+                        f"fleet sim exceeded {max_steps} steps "
+                        f"({n_finished}/{len(reqs)} finished)")
+                dt = price_step_s(self.oracle, plan)
+                for r, _ in plan.prefill:
+                    if r.start_s is None:
+                        r.start_s = now
+                for r in plan.decode:
+                    if r.start_s is None:
+                        r.start_s = now
+                pool.busy = True
+                pool.n_steps += 1
+                pool.busy_s += dt
+                pool.phase_s[plan.kind] = pool.phase_s.get(plan.kind, 0.0) + dt
+                pool.steps_by_kind[plan.kind] = \
+                    pool.steps_by_kind.get(plan.kind, 0) + 1
+                evq.push(now + dt, STEP_DONE, (rep, pool, plan))
+        if n_finished != len(reqs):
+            raise RuntimeError(
+                f"fleet sim deadlocked: {len(reqs) - n_finished} of "
+                f"{len(reqs)} requests unfinished across "
+                f"{len(replicas)} replicas")
+        stats1 = self.oracle.stats()
+        delta = {k: stats1.get(k, 0) - stats0.get(k, 0)
+                 for k in ("hits", "misses")}
+        delta["hit_rate"] = round(
+            delta["hits"] / max(delta["hits"] + delta["misses"], 1), 4)
+        delta["distinct_steps"] = self.oracle.n_distinct_steps
+        return FleetReport.build(
+            finished_by, replicas, slo, router.name,
+            scaler.trace if scaler is not None else [], delta)
+
+
+# ----------------------------------------------------------------------
+@dataclass
 class ServingScenario:
     """A request-level what-if the explorer can rank candidates by.
 
@@ -229,6 +516,7 @@ class ServingScenario:
     policy: str = "continuous"          # continuous | chunked | static
     token_budget: int = 256             # chunked-prefill budget
     ctx_floor: int = 256
+    fleet: object | None = None         # FleetSpec -> fleet-level evaluation
 
     @staticmethod
     def default(seed: int = 0) -> "ServingScenario":
@@ -241,9 +529,17 @@ class ServingScenario:
         return make_policy(self.policy, max_batch,
                            token_budget=self.token_budget)
 
-    def evaluate(self, sim: Simulator, cfg: ModelConfig, cand) -> ServingReport:
+    def evaluate(self, sim: Simulator, cfg: ModelConfig, cand):
+        if self.fleet is not None and not self.fleet.trivial:
+            # fleet evaluation: the full workload hits the routed fleet, the
+            # candidate's per-replica batch caps each engine, and the
+            # resulting goodput is system-level already (no dp*pods scaling)
+            fsim = FleetSimulator(sim, cfg, par=cand.par,
+                                  policy=self.make_policy(cand.B_local()),
+                                  fleet=self.fleet, ctx_floor=self.ctx_floor)
+            return fsim.run(self.workload, slo=self.slo)
         replicas = max(cand.par.dp * cand.par.pods, 1)
-        wl = self.workload.thin(replicas)
+        wl = self.workload.shard(replicas)
         ssim = ServingSimulator(sim, cfg, par=cand.par,
                                 policy=self.make_policy(cand.B_local()),
                                 ctx_floor=self.ctx_floor)

@@ -43,12 +43,16 @@ class SimRequest:
 
     Progress fields are mutated by the event loop; ``ServingSimulator.run``
     operates on reset copies so a :class:`Workload` can be replayed through
-    any number of policies/candidates.
+    any number of policies/candidates.  ``session`` (-1 = sessionless)
+    groups requests that share a conversation prefix — the fleet router's
+    session-affinity policy keeps a session on one replica so its prefix
+    stays in that replica's cache.
     """
     rid: int
     arrival_s: float
     prompt_len: int
     output_len: int
+    session: int = -1
     # progress (mutated by the event loop)
     prefilled: int = 0
     decoded: int = 0
@@ -147,19 +151,39 @@ class Workload:
                        output_len=max(int(o), 1))
             for i, (a, p, o) in enumerate(rows)])
 
-    def thin(self, k: int, offset: int = 0) -> "Workload":
-        """Every ``k``-th request (deterministic round-robin split) —
-        approximates splitting the arrival stream over ``k`` identical
-        replicas, which is how the explorer's goodput objective turns a
-        system-level workload into a per-replica one."""
+    def shard(self, k: int, offset: int = 0) -> "Workload":
+        """Every ``k``-th request (deterministic round-robin split) — one
+        replica's share of a round-robin split over ``k`` identical
+        replicas.  This is exactly what a round-robin fleet router delivers
+        to replica ``offset``, which is how the explorer's goodput objective
+        turns a system-level workload into a per-replica one (and what the
+        shim↔spec bit-identity tests assert)."""
         if k <= 1:
             return Workload([r.reset_copy() for r in self.requests])
         return Workload([r.reset_copy()
                          for r in self.requests[offset % k::k]])
 
+    def thin(self, k: int, offset: int = 0) -> "Workload":
+        """Deprecated replica-thinning knob: describe the replica split with
+        :class:`~repro.api.spec.FleetSpec` (``ServingWorkload(fleet=
+        FleetSpec(replicas=k))``) and let the fleet simulator route the
+        stream, or call :meth:`shard` for the raw per-replica share."""
+        import warnings
+
+        from repro.api.spec import CharonDeprecationWarning
+        warnings.warn(
+            "Workload.thin(k) is deprecated; use FleetSpec(replicas=k) on a "
+            "ServingWorkload (see docs/serving.md) or Workload.shard(k) for "
+            "the raw round-robin share", CharonDeprecationWarning,
+            stacklevel=2)
+        return self.shard(k, offset)
+
 
 def synthesize(n: int, *, arrival: str = "poisson", rate_rps: float = 8.0,
                burst_factor: float = 4.0, switch_prob: float = 0.1,
+               period_s: float = 600.0, diurnal_amp: float = 0.8,
+               flash_start_s: float = 60.0, flash_dur_s: float = 30.0,
+               flash_mult: float = 8.0, sessions: int = 0,
                prompt: LengthDist = LengthDist("lognormal", median=512.0,
                                                sigma=0.7, cap=4096),
                output: LengthDist = LengthDist("lognormal", median=128.0,
@@ -168,18 +192,46 @@ def synthesize(n: int, *, arrival: str = "poisson", rate_rps: float = 8.0,
     """Synthesize a deterministic ``n``-request workload.
 
     ``arrival``:
-      * ``poisson``  — exponential interarrivals at ``rate_rps``.
-      * ``uniform``  — evenly spaced at ``1/rate_rps``.
-      * ``bursty``   — two-regime modulated Poisson: the rate alternates
+      * ``poisson``      — exponential interarrivals at ``rate_rps``.
+      * ``uniform``      — evenly spaced at ``1/rate_rps``.
+      * ``bursty``       — two-regime modulated Poisson: the rate alternates
         between ``rate_rps * burst_factor`` (burst) and
         ``rate_rps / burst_factor`` (lull); the regime flips with
         probability ``switch_prob`` per arrival (sticky bursts).  The mean
         rate is of order ``rate_rps`` but not exactly it — this is a shape
         knob, not a calibrated trace.
+      * ``diurnal``      — non-homogeneous Poisson with a sinusoidal rate
+        ``rate_rps * (1 + diurnal_amp * sin(2πt / period_s))`` (Lewis-
+        Shedler thinning against the peak rate): the traffic shape an
+        autoscaler earns its keep on.
+      * ``flash_crowd``  — base Poisson at ``rate_rps`` with a
+        ``flash_mult``× spike during ``[flash_start_s, flash_start_s +
+        flash_dur_s)`` (thinning again) — the scale-up stress case.
+
+    ``sessions > 0`` tags every request with a session id drawn uniformly
+    from ``range(sessions)`` (multi-turn users); ``sessions = 0`` leaves
+    requests sessionless and the rng stream identical to earlier versions.
     """
     rng = random.Random(seed)
     t = float(start_s)
     in_burst = False
+
+    if arrival == "diurnal":
+        amp = min(max(float(diurnal_amp), 0.0), 1.0)
+        peak = rate_rps * (1.0 + amp)
+        two_pi = 2.0 * math.pi
+
+        def rate_at(ts: float) -> float:
+            return rate_rps * (1.0 + amp * math.sin(two_pi * ts / period_s))
+    elif arrival == "flash_crowd":
+        peak = rate_rps * max(float(flash_mult), 1.0)
+        flash_end = flash_start_s + flash_dur_s
+
+        def rate_at(ts: float) -> float:
+            return peak if flash_start_s <= ts < flash_end else rate_rps
+    else:
+        peak = rate_at = None
+
     reqs = []
     for i in range(n):
         if arrival == "poisson":
@@ -191,9 +243,18 @@ def synthesize(n: int, *, arrival: str = "poisson", rate_rps: float = 8.0,
                 in_burst = not in_burst
             r = rate_rps * (burst_factor if in_burst else 1.0 / burst_factor)
             t += rng.expovariate(r)
+        elif rate_at is not None:
+            # thinning: candidate points at the peak rate, accepted with
+            # probability rate(t)/peak — exact for any bounded rate function
+            while True:
+                t += rng.expovariate(peak)
+                if rng.random() * peak <= rate_at(t):
+                    break
         else:
             raise ValueError(f"unknown arrival process {arrival!r}")
-        reqs.append(SimRequest(rid=i, arrival_s=t,
-                               prompt_len=prompt.sample(rng),
-                               output_len=output.sample(rng)))
+        req = SimRequest(rid=i, arrival_s=t, prompt_len=prompt.sample(rng),
+                         output_len=output.sample(rng))
+        if sessions > 0:
+            req.session = rng.randrange(sessions)
+        reqs.append(req)
     return Workload(reqs)

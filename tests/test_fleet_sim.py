@@ -1,0 +1,323 @@
+"""Fleet-scale serving: spec round trips, router/autoscaler behaviour,
+request conservation, shim↔spec bit-identity, report aggregation and the
+fleet goodput sweep (serial == parallel, manifest provenance)."""
+import json
+import warnings
+
+import pytest
+
+from repro.api import (
+    AutoscalerSpec, Cluster, FleetSpec, RouterSpec, ServingWorkload, SimSpec,
+    SweepSpace, spec_replace, sweep,
+)
+from repro.configs import get_config
+from repro.core import ParallelConfig, Simulator
+from repro.serving.sim import (
+    SLO, FleetReport, FleetSimulator, LengthDist, ServingReport,
+    ServingSimulator, Workload, make_router, synthesize,
+)
+
+CFG = get_config("xlstm-125m")
+PAR = ParallelConfig(tp=2)
+SHORT = dict(prompt=LengthDist("lognormal", median=64.0, sigma=0.6, cap=256),
+             output=LengthDist("lognormal", median=12.0, sigma=0.5, cap=48))
+
+
+@pytest.fixture(scope="module")
+def sim():
+    # module-scoped: the shared oracle's cold misses dominate; every test
+    # after the first runs warm
+    return Simulator("tpu_v5e", engine="analytical")
+
+
+def _spec(n=200, rate=48.0, seed=3, arrival="poisson", fleet=None, **kw):
+    return SimSpec(CFG, cluster=Cluster("tpu_v5e"), parallel=PAR,
+                   workload=ServingWorkload(
+                       n_requests=n, arrival=arrival, rate_rps=rate,
+                       seed=seed, fleet=fleet or FleetSpec(), **SHORT, **kw))
+
+
+# ---------------- spec types ----------------
+
+def test_fleet_spec_roundtrip_and_hash():
+    fleet = FleetSpec(replicas=4, router=RouterSpec("session_affinity"),
+                      autoscaler=AutoscalerSpec(max_replicas=6),
+                      prefill_replicas=2, prefill_batch=8)
+    spec = _spec(fleet=fleet, sessions=16)
+    again = SimSpec.from_json(spec.to_json())
+    assert again == spec and hash(again) == hash(spec)
+    assert again.json_hash() == spec.json_hash()
+    assert again.workload.fleet.autoscaler == fleet.autoscaler
+    # no-autoscaler fleets round-trip the None
+    spec2 = _spec(fleet=FleetSpec(replicas=2))
+    assert SimSpec.from_json(spec2.to_json()) == spec2
+
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError):
+        FleetSpec(replicas=0)
+    with pytest.raises(ValueError):
+        RouterSpec("best_effort")
+    with pytest.raises(ValueError):
+        RouterSpec("session_affinity", fallback="session_affinity")
+    with pytest.raises(ValueError):
+        AutoscalerSpec(scale_up_queue=2.0, scale_down_queue=4.0)
+    with pytest.raises(ValueError):
+        AutoscalerSpec(min_replicas=5, max_replicas=2)
+    assert FleetSpec().trivial
+    assert not FleetSpec(replicas=2).trivial
+    assert not FleetSpec(autoscaler=AutoscalerSpec()).trivial
+
+
+def test_fleet_fields_are_sweep_axes():
+    spec = _spec()
+    out = spec_replace(spec, {"workload.fleet.replicas": 8,
+                              "workload.fleet.router": RouterSpec(
+                                  "least_loaded")})
+    assert out.workload.fleet.replicas == 8
+    assert out.workload.fleet.router.kind == "least_loaded"
+    assert spec.workload.fleet.replicas == 1      # frozen base untouched
+    with pytest.raises(KeyError):
+        spec_replace(spec, {"workload.fleet.nope": 1})
+    with pytest.raises(KeyError):
+        # descending through a None autoscaler is an explicit error
+        spec_replace(spec, {"workload.fleet.autoscaler.min_replicas": 2})
+
+
+# ---------------- shim <-> spec identity ----------------
+
+def test_round_robin_fleet_matches_sharded_single_runs(sim):
+    """Replica i of a round-robin fleet sees exactly ``shard(k, i)``; its
+    per-replica report must be bit-identical to a standalone run of that
+    shard (the property that retires ``Workload.thin``)."""
+    spec = _spec(n=150, fleet=FleetSpec(replicas=3))
+    w = spec.workload
+    frep = ServingSimulator(sim).run(spec)
+    assert isinstance(frep, FleetReport) and frep.n_replicas == 3
+    for i in range(3):
+        solo = ServingSimulator(sim, CFG, par=PAR, policy=w.make_policy(),
+                                ctx_floor=w.ctx_floor).run(
+            w.build().shard(3, i), slo=w.slo)
+        per = frep.replicas[i]
+        assert per.n_requests == solo.n_requests
+        assert per.ttft_s == solo.ttft_s
+        assert per.tpot_ms == solo.tpot_ms
+        assert per.n_steps == solo.n_steps
+        assert per.utilization == solo.utilization
+
+
+def test_thin_shim_equals_router_delivery():
+    wl = synthesize(60, rate_rps=20.0, seed=7, **SHORT)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        thinned = wl.thin(4, offset=2)
+    key = lambda w: [(r.rid, r.arrival_s, r.prompt_len, r.output_len)
+                     for r in w.requests]
+    assert key(thinned) == key(wl.shard(4, offset=2))
+    # and shard(k, i) is what the round-robin router hands replica i
+    class Rep:
+        def __init__(self, index):
+            self.index = index
+    reps = [Rep(i) for i in range(4)]
+    router = make_router(RouterSpec())
+    routed = [[] for _ in reps]
+    for r in wl.requests:
+        routed[router.route(r, reps, r.arrival_s).index].append(r)
+    assert [r.rid for r in routed[2]] == [r.rid for r in thinned.requests]
+
+
+# ---------------- determinism + conservation ----------------
+
+@pytest.mark.parametrize("router", ["round_robin", "least_loaded",
+                                    "session_affinity"])
+def test_fleet_conservation_and_determinism(sim, router):
+    fleet = FleetSpec(replicas=3, router=RouterSpec(router))
+    spec = _spec(n=200, arrival="bursty", seed=11, sessions=12, fleet=fleet)
+    a = ServingSimulator(sim).run(spec)
+    b = ServingSimulator(sim).run(spec)
+    assert a.n_requests == 200                  # conservation (else the
+    assert sum(a.replica_requests.values()) == 200   # loop raised)
+    assert a.ttft_s == b.ttft_s and a.tpot_ms == b.tpot_ms
+    assert a.replica_requests == b.replica_requests
+    # everything but the oracle cache counters (cold first run, warm second)
+    sa, sb = a.summary(), b.summary()
+    sa.pop("oracle_stats"), sb.pop("oracle_stats")
+    assert sa == sb
+
+
+def test_disaggregated_fleet_conserves(sim):
+    spec = _spec(n=150, fleet=FleetSpec(replicas=2, prefill_replicas=1,
+                                        prefill_batch=4))
+    rep = ServingSimulator(sim).run(spec)
+    assert rep.n_requests == 150
+    # requests are attributed to their decode replica; prefill replicas
+    # finish nothing themselves (single-token requests aside)
+    assert set(rep.replica_utilization) >= {"r0/decode", "r1/decode",
+                                            "r2/prefill"}
+    assert rep.replica_utilization["r2/prefill"]["steps"] > 0
+
+
+def test_least_loaded_beats_round_robin_on_bursty(sim):
+    """Under bursty arrivals, load-aware routing must differ from blind
+    round-robin — and not be worse on p99 queueing."""
+    reps = {}
+    for kind in ("round_robin", "least_loaded"):
+        spec = _spec(n=250, arrival="bursty", rate=64.0, seed=5,
+                     fleet=FleetSpec(replicas=3, router=RouterSpec(kind)))
+        reps[kind] = ServingSimulator(sim).run(spec)
+    rr, ll = reps["round_robin"], reps["least_loaded"]
+    assert rr.replica_requests != ll.replica_requests
+    assert ll.queue_delay_s.p99 <= rr.queue_delay_s.p99
+
+
+def test_session_affinity_is_sticky(sim):
+    spec = _spec(n=200, sessions=8,
+                 fleet=FleetSpec(replicas=4,
+                                 router=RouterSpec("session_affinity")))
+    rep = ServingSimulator(sim).run(spec)
+    by_session = {}
+    for i, per in enumerate(rep.replicas):
+        for r in per.requests:
+            by_session.setdefault(r.session, set()).add(i)
+    # every session lands on exactly one replica
+    assert by_session and all(len(v) == 1 for v in by_session.values())
+    # and more than one replica takes traffic overall
+    assert len({next(iter(v)) for v in by_session.values()}) > 1
+
+
+# ---------------- autoscaler ----------------
+
+def test_autoscaler_no_thrash_on_flat_trace(sim):
+    """Hysteresis: a steady low-rate trace inside the deadband produces no
+    scale actions at all."""
+    fleet = FleetSpec(replicas=2, autoscaler=AutoscalerSpec(
+        min_replicas=2, max_replicas=4, scale_up_queue=12.0,
+        scale_down_queue=0.0 + 1e-9, interval_s=1.0))
+    spec = _spec(n=150, arrival="uniform", rate=8.0, fleet=fleet)
+    rep = ServingSimulator(sim).run(spec)
+    assert rep.n_requests == 150
+    assert rep.autoscaler_trace == []
+
+
+def test_autoscaler_scales_up_on_flash_crowd(sim):
+    fleet = FleetSpec(replicas=1, router=RouterSpec("least_loaded"),
+                      autoscaler=AutoscalerSpec(
+                          min_replicas=1, max_replicas=4, scale_up_queue=6.0,
+                          scale_down_queue=0.5, interval_s=1.0, cooldown_s=3.0,
+                          provision_s=0.5))
+    spec = _spec(n=500, arrival="flash_crowd", rate=10.0, seed=2,
+                 flash_start_s=5.0, flash_dur_s=25.0, flash_mult=12.0,
+                 fleet=fleet)
+    rep = ServingSimulator(sim).run(spec)
+    ups = [e for e in rep.autoscaler_trace
+           if e["action"].startswith("scale_up")]
+    downs = [e for e in rep.autoscaler_trace
+             if e["action"].startswith("scale_down")]
+    assert ups, "flash crowd must trigger scale-up"
+    assert downs, "post-flash lull must scale back down"
+    assert rep.n_requests == 500                 # drain on scale-down
+    # the extra replicas actually took traffic
+    assert sum(1 for v in rep.replica_requests.values() if v > 0) > 1
+
+
+# ---------------- report aggregation ----------------
+
+def test_fleet_report_equals_hand_merge(sim):
+    spec = _spec(n=120, fleet=FleetSpec(replicas=3))
+    rep = ServingSimulator(sim).run(spec)
+    merged = [r for per in rep.replicas for r in per.requests]
+    hand = ServingReport.build(merged, [], rep.slo, {})
+    assert rep.n_requests == hand.n_requests == 120
+    assert rep.ttft_s == hand.ttft_s
+    assert rep.tpot_ms == hand.tpot_ms
+    assert rep.e2e_s == hand.e2e_s
+    assert rep.makespan_s == hand.makespan_s
+    assert rep.slo_attainment == hand.slo_attainment
+    assert abs(rep.goodput_rps - hand.goodput_rps) < 1e-12
+    assert rep.n_steps == sum(per.n_steps for per in rep.replicas)
+
+
+def test_fleet_report_is_system_level():
+    assert FleetReport.system_level and not ServingReport.system_level
+
+
+# ---------------- arrival generators ----------------
+
+def test_diurnal_and_flash_generators():
+    di = synthesize(800, arrival="diurnal", rate_rps=20.0, period_s=40.0,
+                    diurnal_amp=0.9, seed=4, **SHORT)
+    arr = [r.arrival_s for r in di.requests]
+    assert arr == sorted(arr)
+    assert synthesize(800, arrival="diurnal", rate_rps=20.0, period_s=40.0,
+                      diurnal_amp=0.9, seed=4, **SHORT).requests[-1].arrival_s \
+        == arr[-1]
+    # rate modulation: the peak-quarter of the cycle is denser than the
+    # trough-quarter (sin > 0 vs sin < 0)
+    import math
+    phase = [math.sin(2 * math.pi * t / 40.0) for t in arr]
+    assert sum(1 for p in phase if p > 0.5) > 2 * sum(
+        1 for p in phase if p < -0.5)
+
+    fl = synthesize(600, arrival="flash_crowd", rate_rps=10.0,
+                    flash_start_s=10.0, flash_dur_s=10.0, flash_mult=8.0,
+                    seed=4, **SHORT)
+    t = [r.arrival_s for r in fl.requests]
+    in_flash = sum(1 for x in t if 10.0 <= x < 20.0)
+    before = sum(1 for x in t if 0.0 <= x < 10.0)
+    assert in_flash > 3 * max(before, 1)
+
+
+# ---------------- fleet goodput sweep ----------------
+
+def test_fleet_sweep_ranks_and_manifest(sim, tmp_path):
+    base = _spec(n=250, arrival="diurnal", rate=120.0, seed=1,
+                 slo=SLO(ttft_s=0.5, tpot_ms=60.0))
+    space = SweepSpace(base, {"workload.fleet.replicas": (1, 2, 4)})
+    path = tmp_path / "manifest.json"
+    res = sweep(space, sim=sim, objective="goodput", manifest=str(path))
+    ranked = res.ranked()
+    assert len(ranked) == 3
+    # the trace saturates small fleets: more replicas -> strictly better
+    # goodput, and the biggest fleet wins
+    goodputs = {r.spec.workload.fleet.replicas: r.goodput_rps for r in ranked}
+    assert goodputs[4] > goodputs[2] > goodputs[1]
+    assert ranked[0].spec.workload.fleet.replicas == 4
+    # FleetReports are system-level: goodput is NOT scaled by dp*pods
+    assert ranked[0].goodput_rps == ranked[0].serving.goodput_rps
+
+    doc = json.loads(path.read_text())
+    assert doc["kind"] == "charon-sweep-manifest"
+    assert doc["base_hash"] == base.json_hash()
+    assert doc["axes"] == {"workload.fleet.replicas": [1, 2, 4]}
+    assert len(doc["candidates"]) == 3 and len(doc["ranking"]) == 3
+    assert doc["ranking"][0] == ranked[0].spec.json_hash()
+    hashes = {row["json_hash"] for row in doc["candidates"]}
+    assert set(doc["ranking"]) == hashes
+    # every row's spec JSON reconstructs the exact spec it hashes to
+    for row in doc["candidates"]:
+        rebuilt = SimSpec.from_json(json.dumps(row["spec"]))
+        assert rebuilt.json_hash() == row["json_hash"]
+
+
+def test_fleet_sweep_parallel_bit_identical(sim):
+    """workers=2 shards the fleet candidates over processes; rankings and
+    every objective value must match the serial sweep exactly."""
+    base = _spec(n=150, arrival="diurnal", rate=64.0, seed=1,
+                 slo=SLO(ttft_s=1.0, tpot_ms=80.0))
+    space = SweepSpace(base, {"workload.fleet.replicas": (1, 2),
+                              "workload.fleet.prefill_replicas": (0, 1)})
+    ser = sweep(space, sim=sim, objective="goodput")
+    par = sweep(space, objective="goodput", workers=2)
+    key = lambda res: [(r.spec.json_hash(), r.goodput_rps,
+                        r.report.step_time_us) for r in res.ranked()]
+    assert key(ser) == key(par)
+    assert par.workers == 2
+
+
+def test_serving_base_requires_goodput(sim):
+    space = SweepSpace(_spec(), {"workload.fleet.replicas": (1, 2)})
+    with pytest.raises(TypeError):
+        sweep(space, sim=sim)                   # objective defaults step_time
+    with pytest.raises(TypeError):
+        sweep(space, sim=sim, objective="goodput",
+              scenario=_spec().workload)        # spec already IS the scenario

@@ -53,15 +53,26 @@ def test_bursty_and_uniform_arrivals():
         assert arrivals == sorted(arrivals) and len(set(arrivals)) > 1
 
 
-def test_trace_replay_and_thin():
+def test_trace_replay_and_shard():
     wl = Workload.from_trace([(2.0, 5, 3), (0.5, 7, 1), (1.0, 2, 2)])
     assert [r.arrival_s for r in wl.requests] == [0.5, 1.0, 2.0]
     assert [r.prompt_len for r in wl.requests] == [7, 2, 5]
-    half = wl.thin(2)
+    half = wl.shard(2)
     assert [r.rid for r in half.requests] == [0, 2]
-    # thinned copies are reset clones, not aliases
+    assert [r.rid for r in wl.shard(2, offset=1).requests] == [1]
+    # sharded copies are reset clones, not aliases
     half.requests[0].decoded = 99
     assert wl.requests[0].decoded == 0
+
+
+def test_thin_is_deprecated_shard():
+    from repro.api.spec import CharonDeprecationWarning
+    wl = Workload.from_trace([(0.5, 7, 1), (1.0, 2, 2), (2.0, 5, 3)])
+    with pytest.warns(CharonDeprecationWarning):
+        thinned = wl.thin(2)
+    assert ([(r.rid, r.arrival_s, r.prompt_len) for r in thinned.requests]
+            == [(r.rid, r.arrival_s, r.prompt_len)
+                for r in wl.shard(2).requests])
 
 
 def test_pow2_bucket():
