@@ -56,6 +56,7 @@ class StepOracle:
         self._specs: dict[tuple, SimSpec] = {}
         self._price: dict[tuple, float] = {}
         self._raw: dict[tuple, float] = {}
+        self._memo_ver = None       # engine state version the memos are for
 
     @classmethod
     def from_spec(cls, sim: Simulator, spec) -> "StepOracle":
@@ -80,14 +81,30 @@ class StepOracle:
         return spec
 
     # ------------------------------------------------------------------
+    def _memos_live(self, ver=None) -> bool:
+        """The ``_raw``/``_price`` front memos are valid only while the sim
+        cache is enabled and the engine state version is unchanged: a
+        profile-DB put or prediction retrain evicts both wholesale (rather
+        than keying each entry on the version, which would leak dead entries
+        across retrains in long-lived simulators)."""
+        if not self.sim.cache.enabled:
+            return False
+        if ver is None:
+            ver = self.sim.engine._state_version()
+        if ver != self._memo_ver:
+            self._raw.clear()
+            self._price.clear()
+            self._memo_ver = ver
+        return True
+
     def _priced_s(self, mode: str, B: int, S: int, cache_len: int) -> float:
         self.lookups += 1
         # fast path: hashing a nested frozen SimSpec costs ~15 us and a fleet
         # trace prices millions of steps, so repeat lookups resolve through a
-        # plain bucket-tuple memo (state version keeps invalidation intact)
+        # plain bucket-tuple memo (_memos_live keeps invalidation intact)
         ver = self.sim.engine._state_version()
-        fast = (mode, B, S, cache_len, ver)
-        if self.sim.cache.enabled:
+        fast = (mode, B, S, cache_len)
+        if self._memos_live(ver):
             price = self._price.get(fast)
             if price is not None:
                 self.sim.cache.stats["serving"].hits += 1  # semantically a hit
@@ -99,14 +116,15 @@ class StepOracle:
         key = (spec, ver)
         rep = self.sim.cache.get("serving", key, lambda: self.sim.run(spec))
         price = rep.step_time_us / 1e6
-        self._price[fast] = price
+        if self.sim.cache.enabled:
+            self._price[fast] = price
         return price
 
     def _raw_hit(self, key: tuple) -> float | None:
-        """Pre-bucketing memo on raw (mode, batch, ctx, version) keys: a
-        fleet trace repeats raw shapes millions of times, and even the
-        bucket arithmetic + bucketed-key lookup is measurable at that rate."""
-        if not self.sim.cache.enabled:
+        """Pre-bucketing memo on raw (mode, batch, ctx) keys: a fleet trace
+        repeats raw shapes millions of times, and even the bucket arithmetic
+        + bucketed-key lookup is measurable at that rate."""
+        if not self._memos_live():
             return None
         price = self._raw.get(key)
         if price is not None:
@@ -116,24 +134,26 @@ class StepOracle:
 
     def decode_step_s(self, batch: int, ctx: int) -> float:
         """One decode iteration: ``batch`` sequences, deepest context ``ctx``."""
-        key = ("decode", batch, ctx, self.sim.engine._state_version())
+        key = ("decode", batch, ctx)
         price = self._raw_hit(key)
         if price is None:
             B = pow2_bucket(batch)
             C = pow2_bucket(ctx, self.ctx_floor)
             price = self._priced_s("decode", B, C, C)
-            self._raw[key] = price
+            if self.sim.cache.enabled:
+                self._raw[key] = price
         return price
 
     def prefill_s(self, batch: int, seq: int) -> float:
         """One batched prefill of ``batch`` prompts padded to ``seq`` tokens."""
-        key = ("prefill", batch, seq, self.sim.engine._state_version())
+        key = ("prefill", batch, seq)
         price = self._raw_hit(key)
         if price is None:
             B = pow2_bucket(batch)
             S = pow2_bucket(seq, self.seq_floor)
             price = self._priced_s("prefill", B, S, 0)
-            self._raw[key] = price
+            if self.sim.cache.enabled:
+                self._raw[key] = price
         return price
 
     def mixed_step_s(self, n_decode: int, ctx: int, chunk_tokens: int) -> float:

@@ -280,8 +280,10 @@ class FleetSimulator:
     Determinism matches the single-replica loop: seeded workloads, a
     deterministic oracle, heap ties broken by insertion order, and routers/
     autoscaler that are pure functions of fleet state.  Only the pools of
-    the replica an event touches are replanned, so fleet event-loop cost is
-    O(events), not O(events × replicas).
+    the replica an event touches are replanned — except on the final fresh
+    arrival, which replans every entry replica (the fleet-wide drain signal
+    it flips can unblock gang-scheduling pools idling on a partial batch) —
+    so fleet event-loop cost stays O(events), not O(events × replicas).
     """
 
     def __init__(self, sim: Simulator, cfg: ModelConfig | None = None, *,
@@ -329,10 +331,15 @@ class FleetSimulator:
                 reps.append(ReplicaPool(index=len(reps), pools=[pool],
                                         transfer_s=f.transfer_s,
                                         role="prefill"))
-            # decode side of a disaggregated fleet: pure continuous decode
-            for rep in serve:
+            # decode side of a disaggregated fleet: pure continuous decode,
+            # capped by the per-replica policy's admission limit (a
+            # DisaggregatedPD policy names its decode cap explicitly)
+            if isinstance(self.policy, DisaggregatedPD):
+                cap = self.policy.decode_batch
+            else:
                 cap = getattr(self.policy, "max_batch",
                               getattr(self.policy, "batch_size", 16))
+            for rep in serve:
                 rep.pools[:] = [Pool("decode", DecodeOnly(cap), role="decode")]
         entry = [rep for rep in reps if rep.role == "prefill"] or serve
         return reps, serve, entry
@@ -430,6 +437,7 @@ class FleetSimulator:
             ev = evq.pop()
             now = ev.time
             rep = None
+            replan: list[ReplicaPool] = []
             if ev.kind == ARRIVAL:
                 rep, pool, r = ev.payload
                 if rep is None:             # fresh arrival: route it now
@@ -443,6 +451,13 @@ class FleetSimulator:
                     # waits a little longer, never deadlocks)
                     for x in entry:
                         x.entry.pending_arrivals = remaining
+                    if remaining == 0:
+                        # the drain signal just flipped fleet-wide: an entry
+                        # replica idling on a partial gang (static batching
+                        # planned None while arrivals were pending) gets no
+                        # further events, so the final arrival must replan
+                        # every entry replica, not just the routed one
+                        replan = [x for x in entry if x is not rep]
                 pool.queue.append(r)
                 if r.enqueue_s is None:
                     r.enqueue_s = now
@@ -456,33 +471,35 @@ class FleetSimulator:
                 scaler.tick(now, serve)
                 if remaining > 0 or n_finished < len(reqs):
                     evq.push(now + f.autoscaler.interval_s, AUTOSCALE, ())
-            if rep is None:
-                continue
-            for pool in rep.pools:           # replan only the touched replica
-                if pool.busy:
-                    continue
-                plan = pool.policy.plan(pool, now)
-                if plan is None:
-                    continue
-                steps += 1
-                if steps > max_steps:
-                    raise RuntimeError(
-                        f"fleet sim exceeded {max_steps} steps "
-                        f"({n_finished}/{len(reqs)} finished)")
-                dt = price_step_s(self.oracle, plan)
-                for r, _ in plan.prefill:
-                    if r.start_s is None:
-                        r.start_s = now
-                for r in plan.decode:
-                    if r.start_s is None:
-                        r.start_s = now
-                pool.busy = True
-                pool.n_steps += 1
-                pool.busy_s += dt
-                pool.phase_s[plan.kind] = pool.phase_s.get(plan.kind, 0.0) + dt
-                pool.steps_by_kind[plan.kind] = \
-                    pool.steps_by_kind.get(plan.kind, 0) + 1
-                evq.push(now + dt, STEP_DONE, (rep, pool, plan))
+            if rep is not None:
+                replan.insert(0, rep)        # touched replica replans first
+            for prep in replan:
+                for pool in prep.pools:
+                    if pool.busy:
+                        continue
+                    plan = pool.policy.plan(pool, now)
+                    if plan is None:
+                        continue
+                    steps += 1
+                    if steps > max_steps:
+                        raise RuntimeError(
+                            f"fleet sim exceeded {max_steps} steps "
+                            f"({n_finished}/{len(reqs)} finished)")
+                    dt = price_step_s(self.oracle, plan)
+                    for r, _ in plan.prefill:
+                        if r.start_s is None:
+                            r.start_s = now
+                    for r in plan.decode:
+                        if r.start_s is None:
+                            r.start_s = now
+                    pool.busy = True
+                    pool.n_steps += 1
+                    pool.busy_s += dt
+                    pool.phase_s[plan.kind] = \
+                        pool.phase_s.get(plan.kind, 0.0) + dt
+                    pool.steps_by_kind[plan.kind] = \
+                        pool.steps_by_kind.get(plan.kind, 0) + 1
+                    evq.push(now + dt, STEP_DONE, (prep, pool, plan))
         if n_finished != len(reqs):
             raise RuntimeError(
                 f"fleet sim deadlocked: {len(reqs) - n_finished} of "

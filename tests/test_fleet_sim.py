@@ -145,6 +145,32 @@ def test_fleet_conservation_and_determinism(sim, router):
     assert sa == sb
 
 
+@pytest.mark.parametrize("n", [30, 45, 200])
+def test_static_gang_fleet_drains(sim, n):
+    """Regression: a gang-scheduling replica idling on a partial batch is
+    unblocked by the *fleet-wide* last arrival — which usually lands on a
+    different replica — so a static-policy fleet must drain, not deadlock."""
+    fleet = FleetSpec(replicas=2)
+    spec = _spec(n=n, seed=3, policy="static", max_batch=8, fleet=fleet)
+    a = ServingSimulator(sim).run(spec)
+    assert a.n_requests == n
+    assert sum(a.replica_requests.values()) == n
+    b = ServingSimulator(sim).run(spec)
+    assert a.ttft_s == b.ttft_s and a.tpot_ms == b.tpot_ms
+
+
+def test_disaggregated_fleet_uses_policy_decode_batch(sim):
+    """Fleet-level disaggregation with a per-replica DisaggregatedPD policy
+    must cap decode replicas at the policy's decode_batch, not a default."""
+    from repro.serving.sim.policies import DisaggregatedPD
+
+    fsim = FleetSimulator(sim, CFG, par=PAR,
+                          policy=DisaggregatedPD(decode_batch=7),
+                          fleet=FleetSpec(replicas=2, prefill_replicas=1))
+    _, serve, _ = fsim._replicas()
+    assert {p.policy.max_batch for rep in serve for p in rep.pools} == {7}
+
+
 def test_disaggregated_fleet_conserves(sim):
     spec = _spec(n=150, fleet=FleetSpec(replicas=2, prefill_replicas=1,
                                         prefill_batch=4))

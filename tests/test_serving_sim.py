@@ -203,6 +203,32 @@ def test_oracle_invalidated_on_engine_state_mutation():
     assert s.cache_stats()["serving"]["misses"] > misses0
 
 
+def test_oracle_front_memos_evict_and_respect_cache_toggle():
+    from repro.serving.sim.oracle import StepOracle
+
+    s = Simulator("tpu_v5e", engine="analytical")
+    oracle = StepOracle(s, CFG, PAR)
+    oracle.decode_step_s(4, 300)
+    oracle.prefill_s(2, 128)
+    assert len(oracle._raw) == 2 and len(oracle._price) == 2
+    # a state-version change evicts stale front-memo entries wholesale
+    # instead of leaking them (keys no longer carry the version)
+    orig = s.engine._state_version
+    s.engine._state_version = lambda: ("bumped",)
+    try:
+        oracle.decode_step_s(4, 300)
+        assert len(oracle._raw) == 1 and len(oracle._price) == 1
+    finally:
+        s.engine._state_version = orig
+    # with the sim cache disabled the memos are never populated
+    s2 = Simulator("tpu_v5e", engine="analytical")
+    s2.cache.enabled = False
+    o2 = StepOracle(s2, CFG, PAR)
+    o2.decode_step_s(4, 300)
+    o2.prefill_s(2, 128)
+    assert not o2._raw and not o2._price
+
+
 # ---------------- explorer goodput objective ----------------
 
 def test_goodput_ranking_diverges_from_step_time(sim):
