@@ -1,0 +1,117 @@
+"""Resilience-aware training simulation (goodput under MTBF).
+
+Two cases on a qwen2.5-32b training spec (v5e, tp=4 x dp=8, 4 hosts):
+
+* ``goodput_under_mtbf`` — the headline scenario: 2000 steps under a
+  4-hour host MTBF with priced sync checkpoints every 100 steps.  Reports
+  goodput, the lost-work breakdown, and the goodput-vs-checkpoint-interval
+  curve replayed against the *same* seeded failure trace — with the
+  simulated optimal interval next to the Young/Daly closed form.  The perf
+  number is replayed timeline steps per second of wall time (the step
+  oracle prices each mesh once; the replay itself is bookkeeping).
+* ``interval_sweep`` — checkpoint cadence x spare capacity ranked by
+  useful tokens/sec via ``sweep(objective="goodput_under_failures")``,
+  with the provenance manifest written next to the results.  Every
+  candidate replays the identical trace, so the ranking isolates the
+  policy, not the luck of the failure draw.
+"""
+from __future__ import annotations
+
+import os
+import time
+from pathlib import Path
+
+from repro.api import (
+    CheckpointSpec, Cluster, FaultModel, ResilienceSpec, SimSpec, SweepSpace,
+    TrainWorkload, sweep,
+)
+from repro.configs import get_config
+from repro.core import ParallelConfig, Simulator
+from repro.resilience import ResilienceSimulator
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def _base(res: ResilienceSpec | None) -> SimSpec:
+    cfg = get_config("qwen2.5-32b")
+    return SimSpec(cfg, cluster=Cluster("tpu_v5e"),
+                   parallel=ParallelConfig(tp=4, dp=8),
+                   workload=TrainWorkload(global_batch=256, seq_len=4096,
+                                          resilience=res))
+
+
+def run() -> list[dict]:
+    sim = Simulator("tpu_v5e", engine="analytical")
+    rows = []
+
+    # -- goodput under a 4h host MTBF ----------------------------------
+    res = ResilienceSpec(
+        total_steps=2000,
+        faults=FaultModel(host_mtbf_s=4 * 3600.0, seed=7),
+        ckpt=CheckpointSpec(interval_steps=100),
+        chips_per_host=8, spares=1, restart_delay_s=60.0, repair_s=1800.0,
+        optimize_interval=True)
+    t0 = time.time()
+    rep = ResilienceSimulator(sim).run(_base(res))
+    wall = time.time() - t0
+    s = rep.summary()
+    # timeline work: the configured run plus every interval candidate
+    # replays total_steps priced steps against the same trace
+    replays = 1 + sum(1 for c in rep.goodput_by_interval
+                      if c != rep.interval_steps)
+    rows.append({
+        "bench": "resilience_sim", "case": "goodput_under_mtbf",
+        "total_steps": rep.total_steps, "wall_s": round(wall, 2),
+        "timeline_steps_per_sec": round(
+            replays * rep.total_steps / max(wall, 1e-9), 1),
+        "goodput": s["goodput"],
+        "wall_clock_s": s["wall_s"], "ideal_s": s["ideal_s"],
+        "useful_s": s["useful_s"], "rework_s": s["rework_s"],
+        "checkpoint_s": s["checkpoint_s"], "downtime_s": s["downtime_s"],
+        "n_failures": s["n_failures"], "n_restarts": s["n_restarts"],
+        "n_spare_swaps": s["n_spare_swaps"],
+        "save_s": s["save_s"], "mtbf_system_s": s["mtbf_system_s"],
+        "young_daly_interval_steps": s["young_daly_interval_steps"],
+        "simulated_optimal_interval_steps":
+            s["simulated_optimal_interval_steps"],
+        "goodput_by_interval": {str(k): round(v, 4)
+                                for k, v in sorted(
+                                    rep.goodput_by_interval.items())},
+        "paper_claim": "goodput-under-MTBF with priced checkpoints; "
+                       "simulated optimal interval vs Young/Daly",
+    })
+
+    # -- checkpoint cadence x spares, ranked by useful tokens/sec ------
+    workers = min(4, os.cpu_count() or 1)
+    base = _base(ResilienceSpec(
+        total_steps=1000,
+        faults=FaultModel(host_mtbf_s=2 * 3600.0, seed=7),
+        ckpt=CheckpointSpec(interval_steps=100),
+        chips_per_host=8, restart_delay_s=60.0, repair_s=1800.0,
+        optimize_interval=False))
+    space = SweepSpace(base, {
+        "workload.resilience.ckpt.interval_steps": (25, 50, 100, 200, 400),
+        "workload.resilience.spares": (0, 1)})
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    manifest = RESULTS / "resilience_sweep_manifest.json"
+    t0 = time.time()
+    swept = sweep(space, objective="goodput_under_failures", workers=workers,
+                  manifest=str(manifest))
+    wall = time.time() - t0
+    ranked = swept.ranked()
+    rows.append({
+        "bench": "resilience_sim", "case": "interval_sweep",
+        "n_candidates": len(swept.evaluated), "workers": swept.workers,
+        "wall_s": round(wall, 2),
+        "under_60s": wall < 60.0,
+        "manifest": manifest.name,
+        "ranking": [{
+            "interval_steps": r.spec.workload.resilience.ckpt.interval_steps,
+            "spares": r.spec.workload.resilience.spares,
+            "goodput": round(r.resilience.goodput, 4),
+            "useful_tokens_per_s": round(r.resilience.tokens_per_s, 1),
+        } for r in ranked],
+        "paper_claim": "checkpoint-cadence x spare-capacity ranking under "
+                       "a fixed seeded failure trace",
+    })
+    return rows

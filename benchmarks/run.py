@@ -35,6 +35,7 @@ BENCHES = [
     ("fig1_sim_cost", "benchmarks.bench_sim_speed"),
     ("sec53_serving", "benchmarks.bench_serving"),
     ("sec53_fleet", "benchmarks.bench_fleet"),
+    ("sec54_resilience", "benchmarks.bench_resilience"),
 ]
 
 
@@ -76,6 +77,14 @@ def _perf_summary(rows: list[dict]) -> dict:
                 r.get("oracle_hit_rate")
         elif bench == "fleet_sim" and case == "fleet_sweep":
             out["fleet_sweep_wall_s"] = r.get("wall_s")
+        elif bench == "resilience_sim" and case == "goodput_under_mtbf":
+            out["resilience_goodput"] = r.get("goodput")
+            out["resilience_timeline_steps_per_sec"] = \
+                r.get("timeline_steps_per_sec")
+            out["resilience_optimal_interval"] = \
+                r.get("simulated_optimal_interval_steps")
+        elif bench == "resilience_sim" and case == "interval_sweep":
+            out["resilience_sweep_wall_s"] = r.get("wall_s")
     return out
 
 

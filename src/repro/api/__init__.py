@@ -12,15 +12,17 @@ See ``docs/api.md`` for the full surface and the legacy-kwargs migration
 table.
 """
 from repro.api.spec import (
-    STEP_WORKLOADS, AutoscalerSpec, CharonDeprecationWarning, Cluster,
-    DecodeWorkload, FleetSpec, PrefillWorkload, RouterSpec, ServingWorkload,
-    SimSpec, TrainWorkload,
+    STEP_WORKLOADS, AutoscalerSpec, CharonDeprecationWarning, CheckpointSpec,
+    Cluster, DecodeWorkload, FaultModel, FleetSpec, PrefillWorkload,
+    ReplicaFaultSpec, ResilienceSpec, RouterSpec, ServingWorkload, SimSpec,
+    TrainWorkload,
 )
 from repro.api.sweep import SweepSpace, spec_replace, sweep
 
 __all__ = [
-    "STEP_WORKLOADS", "AutoscalerSpec", "CharonDeprecationWarning", "Cluster",
-    "DecodeWorkload", "FleetSpec", "PrefillWorkload", "RouterSpec",
+    "STEP_WORKLOADS", "AutoscalerSpec", "CharonDeprecationWarning",
+    "CheckpointSpec", "Cluster", "DecodeWorkload", "FaultModel", "FleetSpec",
+    "PrefillWorkload", "ReplicaFaultSpec", "ResilienceSpec", "RouterSpec",
     "ServingWorkload", "SimSpec", "TrainWorkload",
     "SweepSpace", "spec_replace", "sweep",
 ]

@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import math
 from dataclasses import dataclass, field
 from typing import ClassVar
 
@@ -86,6 +87,128 @@ class Cluster:
 
 
 # ---------------------------------------------------------------------------
+# Resilience spec types: fault processes, checkpoint pricing, and the
+# resilience scenario itself.  Frozen and hashable like every other spec
+# component, so ``workload.resilience.ckpt.interval_steps`` is a sweep axis
+# and a seeded fault model participates in cache keys / manifests for free.
+
+@dataclass(frozen=True)
+class FaultModel:
+    """Seeded MTBF fault process per component class.
+
+    Each ``*_mtbf_s`` is the mean time between failures of *one* component
+    of that class, in seconds of simulated wall time; ``0`` (or ``inf``)
+    disables the class entirely.  Component failures are independent renewal
+    processes — exponential inter-arrivals by default, or Weibull with shape
+    ``weibull_shape`` (``k < 1`` front-loads infant mortality) scaled so the
+    mean stays at the configured MTBF.  The whole failure trace is a pure
+    function of ``seed`` + component counts: it is sampled in wall-clock
+    time, independent of the checkpoint schedule, so interval sweeps replay
+    the *same* failures.
+    """
+    chip_mtbf_s: float = 0.0
+    host_mtbf_s: float = 0.0
+    link_mtbf_s: float = 0.0
+    dist: str = "exponential"       # exponential | weibull
+    weibull_shape: float = 0.7
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.dist not in ("exponential", "weibull"):
+            raise ValueError(
+                f"fault dist {self.dist!r} not in ('exponential', 'weibull')")
+        if self.dist == "weibull" and self.weibull_shape <= 0:
+            raise ValueError("weibull_shape must be positive")
+        for name in ("chip_mtbf_s", "host_mtbf_s", "link_mtbf_s"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0 (0 disables)")
+
+    @property
+    def active(self) -> bool:
+        """True when any component class can actually fail."""
+        return any(0 < m < math.inf for m in
+                   (self.chip_mtbf_s, self.host_mtbf_s, self.link_mtbf_s))
+
+
+@dataclass(frozen=True)
+class CheckpointSpec:
+    """How (and how often) training state is checkpointed.
+
+    Save cost is priced from the memory report's per-device state bytes
+    (weights + optimizer state) over ``write_gbps``; ``write_gbps = 0``
+    derives the per-device write bandwidth from the cluster's inter-host
+    link (``hw.inter.bandwidth``).  ``mode="sync"`` stalls the full save on
+    the step boundary; ``mode="async"`` stalls only
+    ``async_overhead x save_s`` (the device-to-host snapshot) and the
+    checkpoint becomes *durable* ``save_s`` later — a failure while the
+    write is in flight falls back to the previous durable checkpoint.
+    ``restore_s = restore_factor x save_s``.
+    """
+    interval_steps: int = 0         # checkpoint every N steps; 0 = never
+    mode: str = "sync"              # sync | async
+    write_gbps: float = 0.0         # GB/s per device; 0 = derive from hw
+    restore_factor: float = 1.0
+    async_overhead: float = 0.05
+
+    def __post_init__(self):
+        if self.interval_steps < 0:
+            raise ValueError("interval_steps must be >= 0 (0 = never)")
+        if self.mode not in ("sync", "async"):
+            raise ValueError(f"ckpt mode {self.mode!r} not in "
+                             "('sync', 'async')")
+        if self.write_gbps < 0 or self.restore_factor < 0:
+            raise ValueError("write_gbps / restore_factor must be >= 0")
+        if not 0 <= self.async_overhead <= 1:
+            raise ValueError("async_overhead must be in [0, 1]")
+
+
+@dataclass(frozen=True)
+class ResilienceSpec:
+    """A resilience scenario: run ``total_steps`` training steps against a
+    seeded fault process, pricing checkpoints, restarts, elastic resharding
+    and stragglers.  Attach to ``TrainWorkload.resilience`` and run through
+    ``repro.resilience.ResilienceSimulator`` — the plain step simulation is
+    untouched (``resilience`` never reaches ``sim_kwargs``), so an inactive
+    fault model reproduces the failure-free report bit-for-bit.
+
+    ``chips_per_host`` maps the parallel config's chip count onto failure
+    domains (a host failure takes all its chips).  ``spares`` are warm
+    standby hosts consumed before the mesh degrades; with ``elastic`` the
+    mesh then shrinks dp via ``ElasticPlan.rescale`` (re-priced through the
+    step oracle), otherwise the run stalls until a repair completes
+    (``repair_s`` per host).  Stragglers: each host each step is slowed by
+    ``U(1, straggler_mult)`` with probability ``straggler_prob``; a
+    gang-synchronized step costs the max over hosts.
+    """
+    total_steps: int = 1000
+    faults: FaultModel = FaultModel()
+    ckpt: CheckpointSpec = CheckpointSpec()
+    chips_per_host: int = 8
+    spares: int = 0
+    elastic: bool = True
+    restart_delay_s: float = 60.0   # detection + reschedule + re-init
+    repair_s: float = 1800.0        # failed host returns as a spare after
+    straggler_prob: float = 0.0     # per host, per step
+    straggler_mult: float = 1.0     # max slowdown multiplier
+    optimize_interval: bool = True  # also replay a grid around Young/Daly
+    max_wall_factor: float = 1000.0  # divergence guard (x ideal wall time)
+
+    def __post_init__(self):
+        if self.total_steps < 1:
+            raise ValueError("total_steps must be >= 1")
+        if self.chips_per_host < 1:
+            raise ValueError("chips_per_host must be >= 1")
+        if self.spares < 0:
+            raise ValueError("spares must be >= 0")
+        if not 0 <= self.straggler_prob <= 1:
+            raise ValueError("straggler_prob must be in [0, 1]")
+        if self.straggler_mult < 1:
+            raise ValueError("straggler_mult must be >= 1")
+        if self.restart_delay_s < 0 or self.repair_s < 0:
+            raise ValueError("restart_delay_s / repair_s must be >= 0")
+
+
+# ---------------------------------------------------------------------------
 # Workload variants.  ``mode`` is a real (init=False) field so it survives
 # ``dataclasses.asdict`` round-trips and discriminates reconstruction.
 
@@ -113,6 +236,10 @@ class TrainWorkload(_StepWorkload):
     mode: str = field(default="train", init=False)
     remat: str = "block"            # none | block | dots
     optimizer: str = "adamw"        # adamw | adafactor
+    # resilience scenario (None = plain failure-free step simulation).
+    # Deliberately excluded from sim_kwargs(): step pricing is identical
+    # with or without it, only ResilienceSimulator consumes it.
+    resilience: ResilienceSpec | None = None
 
 
 @dataclass(frozen=True)
@@ -188,6 +315,40 @@ class AutoscalerSpec:
 
 
 @dataclass(frozen=True)
+class ReplicaFaultSpec:
+    """Seeded whole-replica failure injection for the fleet simulator.
+
+    Each replica fails as an independent renewal process with mean
+    ``mtbf_s`` (``0``/``inf`` disables) and recovers ``restart_s`` later.
+    On failure the replica's in-flight and queued requests are rerouted
+    through the fleet router (progress on the failed replica is lost — the
+    requests re-prefill elsewhere); the autoscaler never activates a
+    replica that is currently down.  The trace is a pure function of
+    ``seed`` + replica index, so reports are bit-deterministic.
+    """
+    mtbf_s: float = 0.0
+    restart_s: float = 30.0
+    dist: str = "exponential"       # exponential | weibull
+    weibull_shape: float = 0.7
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mtbf_s < 0:
+            raise ValueError("mtbf_s must be >= 0 (0 disables)")
+        if self.restart_s < 0:
+            raise ValueError("restart_s must be >= 0")
+        if self.dist not in ("exponential", "weibull"):
+            raise ValueError(
+                f"fault dist {self.dist!r} not in ('exponential', 'weibull')")
+        if self.dist == "weibull" and self.weibull_shape <= 0:
+            raise ValueError("weibull_shape must be positive")
+
+    @property
+    def active(self) -> bool:
+        return 0 < self.mtbf_s < math.inf
+
+
+@dataclass(frozen=True)
 class FleetSpec:
     """A replica fleet: how many engine instances, routed and scaled how.
 
@@ -208,6 +369,7 @@ class FleetSpec:
     prefill_replicas: int = 0
     prefill_batch: int = 4
     transfer_s: float = 0.002
+    faults: ReplicaFaultSpec | None = None
 
     def __post_init__(self):
         if self.replicas < 1:
@@ -222,7 +384,7 @@ class FleetSpec:
         """True when this fleet is exactly one plain replica — the single-
         replica event loop handles it without the fleet layer."""
         return (self.replicas == 1 and self.prefill_replicas == 0
-                and self.autoscaler is None)
+                and self.autoscaler is None and self.faults is None)
 
 
 def _default_prompt():
@@ -417,9 +579,18 @@ class SimSpec:
                 scaler = fl.get("autoscaler")
                 fl["autoscaler"] = (AutoscalerSpec(**scaler)
                                     if scaler is not None else None)
+                faults = fl.get("faults")
+                fl["faults"] = (ReplicaFaultSpec(**faults)
+                                if faults is not None else None)
                 w["fleet"] = FleetSpec(**fl)
             workload = ServingWorkload(**w)
         else:
+            res = w.get("resilience")
+            if res is not None:
+                res = dict(res)
+                res["faults"] = FaultModel(**res["faults"])
+                res["ckpt"] = CheckpointSpec(**res["ckpt"])
+                w["resilience"] = ResilienceSpec(**res)
             workload = STEP_WORKLOADS[mode](**w)
         return cls(model=ModelConfig(**d["model"]), cluster=Cluster(**cl),
                    parallel=ParallelConfig(**d["parallel"]),

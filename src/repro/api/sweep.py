@@ -242,6 +242,13 @@ def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
                 res.serving = ServingSimulator(s).run(res.spec)
             else:
                 res.serving = scenario.evaluate(s, res.spec.model, res.cand)
+    elif objective == "goodput_under_failures":
+        from repro.resilience import ResilienceSimulator
+        for idx, res in results:
+            if res.pruned:
+                continue
+            s = _sim_for(res.spec.cluster, sims, engine, persist)
+            res.resilience = ResilienceSimulator(s).run(res.spec)
     return results
 
 
@@ -312,6 +319,9 @@ def _write_manifest(path: str, space: SweepSpace,
                              if res.report is not None else None),
             "goodput_rps": (round(res.goodput_rps, 4)
                             if res.serving is not None else None),
+            "goodput_under_failures": (
+                round(res.resilience.goodput, 6)
+                if res.resilience is not None else None),
             "rank": rank.get(h),
         }
 
@@ -358,6 +368,11 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
     request-level scenario per candidate — pass a
     :class:`~repro.serving.sim.ServingScenario`, a
     :class:`~repro.api.spec.ServingWorkload`, or None for the default.
+    ``objective="goodput_under_failures"`` replays each candidate's seeded
+    failure trace through :class:`~repro.resilience.ResilienceSimulator`
+    (the base must be a ``TrainWorkload`` with ``resilience=`` set, whose
+    nested fields — checkpoint interval, MTBFs, spares — are then ordinary
+    dotted axes); results carry ``EvalResult.resilience``.
 
     A :class:`~repro.api.spec.ServingWorkload` *base* (goodput objective
     only) sweeps the request-level simulator itself: each candidate replays
@@ -379,8 +394,16 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
     sweep: the space, every candidate's full spec (keyed by its
     ``json_hash``), pruned reasons, objective values and the final ranking.
     """
-    if objective not in ("step_time", "goodput"):
+    if objective not in ("step_time", "goodput", "goodput_under_failures"):
         raise ValueError(f"unknown objective {objective!r}")
+    if objective == "goodput_under_failures":
+        w = space.base.workload
+        if getattr(w, "mode", None) != "train" or w.resilience is None:
+            raise TypeError(
+                "goodput_under_failures sweeps price TrainWorkload specs "
+                "with a non-None resilience= — set workload.resilience on "
+                "the base spec (its fields are then sweep axes, e.g. "
+                "'workload.resilience.ckpt.interval_steps')")
     serving_base = isinstance(space.base.workload, ServingWorkload)
     if serving_base and objective != "goodput":
         raise TypeError(

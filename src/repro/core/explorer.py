@@ -58,6 +58,9 @@ class EvalResult:
     # candidate (per-replica workload share; see
     # repro.serving.sim.ServingScenario)
     serving: object | None = None
+    # resilience result when the sweep priced the candidate under failures
+    # (repro.resilience.ResilienceReport; objective="goodput_under_failures")
+    resilience: object | None = None
     # the full SimSpec this candidate evaluated (set by repro.api.sweep)
     spec: object | None = None
 
@@ -181,6 +184,11 @@ class ExplorationResult:
         ``sweep(..., objective="goodput")``.  The two orders genuinely
         differ under load: small batches win on step time while starving
         admission capacity — see docs/serving.md for a documented scenario.
+        ``goodput_under_failures`` ranks by useful tokens per wall second
+        from the resilience replay (then goodput fraction) and requires
+        ``sweep(..., objective="goodput_under_failures")`` — fast-but-
+        fragile configurations genuinely reorder under failures; see
+        docs/resilience.md.
         """
         objective = objective or self.objective
         if objective == "goodput":
@@ -189,6 +197,18 @@ class ExplorationResult:
                     "goodput ranking needs sweep(objective='goodput')")
             return sorted(self.evaluated,
                           key=lambda r: (-r.goodput_rps,
+                                         r.report.step_time_us
+                                         if r.report else 0.0))
+        if objective == "goodput_under_failures":
+            if any(r.resilience is None for r in self.evaluated):
+                raise ValueError(
+                    "goodput_under_failures ranking needs "
+                    "sweep(objective='goodput_under_failures')")
+            # useful tokens per wall second is the deployment-facing number;
+            # goodput fraction breaks ties between equal-throughput meshes
+            return sorted(self.evaluated,
+                          key=lambda r: (-r.resilience.tokens_per_s,
+                                         -r.resilience.goodput,
                                          r.report.step_time_us
                                          if r.report else 0.0))
         if objective == "step_time":

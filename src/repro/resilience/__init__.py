@@ -1,0 +1,17 @@
+"""Resilience-aware simulation: fault injection, checkpoint pricing, and
+goodput under MTBF.
+
+Attach a :class:`~repro.api.spec.ResilienceSpec` to a ``TrainWorkload``
+and run it through :class:`ResilienceSimulator`; sweep checkpoint interval
+x MTBF x spares with ``sweep(space, objective="goodput_under_failures")``.
+See ``docs/resilience.md``.
+"""
+from repro.resilience.faults import KINDS, FailureEvent, FailureGen
+from repro.resilience.report import ResilienceReport
+from repro.resilience.sim import ResilienceSimulator
+from repro.resilience.timeline import ReplayStats, replay
+
+__all__ = [
+    "KINDS", "FailureEvent", "FailureGen", "ReplayStats",
+    "ResilienceReport", "ResilienceSimulator", "replay",
+]

@@ -1,10 +1,12 @@
 """Discrete-event core: a time-ordered queue with deterministic ties.
 
-Three event kinds drive the serving simulation: request ``ARRIVAL`` into a
+Five event kinds drive the serving simulation: request ``ARRIVAL`` into a
 pool's queue (from the workload, or from a prefill pool migrating a request
 to its decode pool), ``STEP_DONE`` (an engine iteration priced by the
 step oracle completes), and — fleet runs only — ``AUTOSCALE`` (the
-autoscaler samples queue depths and may grow or shrink the serving set).
+autoscaler samples queue depths and may grow or shrink the serving set),
+``FAILURE`` (a replica's seeded fault process fires: its in-flight work is
+lost and its requests reroute) and ``RECOVER`` (a failed replica rejoins).
 Ties at equal timestamps break by insertion order (a monotone sequence
 number), so runs are bit-reproducible.
 """
@@ -16,6 +18,8 @@ from dataclasses import dataclass, field
 ARRIVAL = "arrival"
 STEP_DONE = "step_done"
 AUTOSCALE = "autoscale"
+FAILURE = "failure"
+RECOVER = "recover"
 
 
 @dataclass(frozen=True)

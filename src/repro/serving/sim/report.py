@@ -171,12 +171,22 @@ class FleetReport:
     autoscaler_trace: list = field(default_factory=list)
     oracle_stats: dict = field(default_factory=dict)
     requests: list = field(default_factory=list)
+    # replica fault injection (FleetSpec.faults): the seeded failure trace,
+    # and how many queued/in-flight requests were displaced and rerouted
+    failure_trace: list = field(default_factory=list)  # {t, replica} rows
+    n_rerouted: int = 0
 
     system_level: ClassVar[bool] = True
 
+    @property
+    def n_replica_failures(self) -> int:
+        return len(self.failure_trace)
+
     @staticmethod
     def build(finished_by: list, replicas: list, slo: SLO | None, router: str,
-              autoscaler_trace: list, oracle_stats: dict) -> "FleetReport":
+              autoscaler_trace: list, oracle_stats: dict, *,
+              failure_trace: list | None = None,
+              n_rerouted: int = 0) -> "FleetReport":
         """Merge per-replica finished-request lists into the fleet view.
 
         ``finished_by[i]`` holds the requests that *finished* on
@@ -226,7 +236,8 @@ class FleetReport:
                               for rep, chunk in zip(replicas, finished_by)},
             replica_utilization=util,
             autoscaler_trace=list(autoscaler_trace),
-            oracle_stats=oracle_stats, requests=reqs)
+            oracle_stats=oracle_stats, requests=reqs,
+            failure_trace=list(failure_trace or []), n_rerouted=n_rerouted)
 
     def summary(self) -> dict:
         """Flat dict for benchmarks / examples."""
@@ -249,5 +260,7 @@ class FleetReport:
             "steps_by_kind": dict(self.steps_by_kind),
             "replica_requests": dict(self.replica_requests),
             "autoscaler_actions": len(self.autoscaler_trace),
+            "n_replica_failures": self.n_replica_failures,
+            "n_rerouted": self.n_rerouted,
             "oracle_stats": self.oracle_stats,
         }

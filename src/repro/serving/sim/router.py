@@ -110,12 +110,19 @@ class Autoscaler:
 
     def tick(self, now: float, serve: list) -> None:
         sp = self.spec
-        active = [rep for rep in serve if rep.active]
+        # failed replicas (fault injection) hold no load and must not
+        # dilute the depth metric; getattr keeps bare test doubles working
+        def up(rep) -> bool:
+            return getattr(rep, "failed_until", 0.0) <= now
+
+        active = [rep for rep in serve if rep.active and up(rep)]
         depth = sum(rep.load() for rep in active) / max(len(active), 1)
         action = None
         if now - self._last_action_s >= sp.cooldown_s:
             if depth > sp.scale_up_queue and len(active) < sp.max_replicas:
-                standby = [rep for rep in serve if not rep.active]
+                # never provision a replica that is currently down
+                standby = [rep for rep in serve
+                           if not rep.active and up(rep)]
                 if standby:
                     rep = min(standby, key=lambda x: x.index)
                     rep.active = True

@@ -30,7 +30,9 @@ from dataclasses import dataclass, field
 from repro.configs.base import ModelConfig
 from repro.core.passes.base import ParallelConfig
 from repro.core.simulator import Simulator
-from repro.serving.sim.events import ARRIVAL, AUTOSCALE, STEP_DONE, EventQueue
+from repro.serving.sim.events import (
+    ARRIVAL, AUTOSCALE, FAILURE, RECOVER, STEP_DONE, EventQueue,
+)
 from repro.serving.sim.oracle import StepOracle
 from repro.serving.sim.policies import (
     ContinuousBatching, DecodeOnly, DisaggregatedPD, PrefillOnly, StepPlan,
@@ -244,6 +246,11 @@ class ReplicaPool:
     the requests it already holds, so request conservation never depends on
     autoscaler behaviour.  ``ready_at`` models provisioning: a freshly
     scaled-up replica takes traffic once the clock passes it.
+
+    ``failed_until`` is the fault-injection analogue: a failed replica is
+    unroutable (and never plans steps) until the clock passes it.  Each
+    failure bumps ``epoch`` so the in-flight step's ``STEP_DONE`` — priced
+    before the failure — is recognized as stale and dropped.
     """
     index: int
     pools: list
@@ -251,6 +258,11 @@ class ReplicaPool:
     role: str = "serve"                  # serve | prefill (fleet-level disagg)
     active: bool = True
     ready_at: float = 0.0
+    failed_until: float = 0.0
+    epoch: int = 0
+
+    def up(self, now: float) -> bool:
+        return now >= self.failed_until
 
     @property
     def entry(self) -> Pool:
@@ -275,7 +287,12 @@ class FleetSimulator:
     disaggregated — arrivals prefill on dedicated :class:`PrefillOnly`
     replicas, then migrate (paying ``transfer_s``) to the least-loaded
     decode replica.  An optional :class:`~repro.api.spec.AutoscalerSpec`
-    grows/shrinks the serving set on ``AUTOSCALE`` ticks.
+    grows/shrinks the serving set on ``AUTOSCALE`` ticks.  An optional
+    :class:`~repro.api.spec.ReplicaFaultSpec` (``FleetSpec.faults``)
+    injects seeded replica failures: the failed replica's in-flight step is
+    killed (epoch guard), its requests reroute through the router and
+    restart from scratch, the autoscaler skips down replicas, and the
+    report carries the failure trace — SLO goodput under failures.
 
     Determinism matches the single-replica loop: seeded workloads, a
     deterministic oracle, heap ties broken by insertion order, and routers/
@@ -346,10 +363,14 @@ class FleetSimulator:
 
     def _routable(self, group: list[ReplicaPool],
                   now: float) -> list[ReplicaPool]:
-        up = [rep for rep in group if rep.active and now >= rep.ready_at]
-        # provisioning gap or everything scaled down: fall back rather than
-        # drop arrivals (min_replicas >= 1 makes the active set non-empty)
-        return up or [rep for rep in group if rep.active] or group
+        up = [rep for rep in group
+              if rep.active and now >= rep.ready_at and rep.up(now)]
+        # provisioning gap, a fleet-wide outage, or everything scaled down:
+        # fall back rather than drop arrivals (a request queued on a down
+        # replica is drained — or re-displaced — when it recovers)
+        return (up
+                or [rep for rep in group if rep.active and rep.up(now)]
+                or [rep for rep in group if rep.active] or group)
 
     def _finish(self, rep: ReplicaPool, pool: Pool, plan: StepPlan,
                 now: float, evq: EventQueue, serve: list[ReplicaPool],
@@ -359,7 +380,10 @@ class FleetSimulator:
             r.prefilled += chunk
             if r.prefilled >= r.prompt_len:
                 pool.prefilling.remove(r)
-                r.first_token_s = now       # prefill emits the first token
+                if r.first_token_s is None:
+                    r.first_token_s = now   # prefill emits the first token
+                    # (a request re-prefilling after a replica failure keeps
+                    # its original TTFT — that token was already delivered)
                 r.decoded = 1
                 if r.decoded >= r.output_len:
                     r.finished_s = now
@@ -428,6 +452,20 @@ class FleetSimulator:
         if scaler is not None and reqs:
             evq.push(reqs[0].arrival_s + f.autoscaler.interval_s,
                      AUTOSCALE, ())
+        # seeded replica fault injection: every replica (standbys included —
+        # machines fail whether or not they take traffic) owns a lazy
+        # renewal stream; the next failure is always one event ahead
+        faults = f.faults if (f.faults is not None and f.faults.active) \
+            else None
+        fault_gap: dict[int, object] = {}
+        if faults is not None and reqs:
+            from repro.resilience.faults import replica_fault_stream
+            for rep in replicas:
+                fault_gap[rep.index] = replica_fault_stream(faults, rep.index)
+                evq.push(reqs[0].arrival_s + fault_gap[rep.index](),
+                         FAILURE, (rep,))
+        failure_trace: list[dict] = []
+        n_rerouted = 0
         remaining = len(reqs)
         finished_by: list[list[SimRequest]] = [[] for _ in replicas]
         n_finished = 0
@@ -462,11 +500,46 @@ class FleetSimulator:
                 if r.enqueue_s is None:
                     r.enqueue_s = now
             elif ev.kind == STEP_DONE:
-                rep, pool, plan = ev.payload
+                rep, pool, plan, epoch = ev.payload
+                if epoch != rep.epoch:
+                    continue                 # step killed by a failure
                 before = len(finished_by[rep.index])
                 self._finish(rep, pool, plan, now, evq, serve, decode_router,
                              finished_by)
                 n_finished += len(finished_by[rep.index]) - before
+            elif ev.kind == FAILURE:
+                (frep,) = ev.payload
+                if n_finished >= len(reqs):
+                    continue                 # trace done: stop the process
+                failure_trace.append({"t": round(now, 4),
+                                      "replica": frep.index})
+                frep.failed_until = now + faults.restart_s
+                frep.epoch += 1              # kills the in-flight STEP_DONE
+                displaced: list[SimRequest] = []
+                for pool in frep.pools:
+                    pool.busy = False
+                    displaced.extend(pool.queue)
+                    pool.queue.clear()
+                    displaced.extend(pool.prefilling)
+                    pool.prefilling.clear()
+                    displaced.extend(pool.running)
+                    pool.running.clear()
+                evq.push(frep.failed_until, RECOVER, (frep,))
+                evq.push(frep.failed_until + fault_gap[frep.index](),
+                         FAILURE, (frep,))
+                # reroute what the replica held: KV state died with it, so
+                # requests restart from scratch (keeping their original
+                # enqueue/start/first-token stamps — latency is end-to-end)
+                for r in displaced:
+                    r.prefilled = 0
+                    r.decoded = 0
+                    n_rerouted += 1
+                    target = router.route(r, self._routable(entry, now), now)
+                    target.entry.queue.append(r)
+                    if target not in replan:
+                        replan.append(target)
+            elif ev.kind == RECOVER:
+                (rep,) = ev.payload          # replan it (gated if re-failed)
             else:                            # AUTOSCALE
                 scaler.tick(now, serve)
                 if remaining > 0 or n_finished < len(reqs):
@@ -474,6 +547,8 @@ class FleetSimulator:
             if rep is not None:
                 replan.insert(0, rep)        # touched replica replans first
             for prep in replan:
+                if not prep.up(now):
+                    continue                 # down: drains at its RECOVER
                 for pool in prep.pools:
                     if pool.busy:
                         continue
@@ -499,7 +574,8 @@ class FleetSimulator:
                         pool.phase_s.get(plan.kind, 0.0) + dt
                     pool.steps_by_kind[plan.kind] = \
                         pool.steps_by_kind.get(plan.kind, 0) + 1
-                    evq.push(now + dt, STEP_DONE, (prep, pool, plan))
+                    evq.push(now + dt, STEP_DONE, (prep, pool, plan,
+                                                   prep.epoch))
         if n_finished != len(reqs):
             raise RuntimeError(
                 f"fleet sim deadlocked: {len(reqs) - n_finished} of "
@@ -513,7 +589,8 @@ class FleetSimulator:
         delta["distinct_steps"] = self.oracle.n_distinct_steps
         return FleetReport.build(
             finished_by, replicas, slo, router.name,
-            scaler.trace if scaler is not None else [], delta)
+            scaler.trace if scaler is not None else [], delta,
+            failure_trace=failure_trace, n_rerouted=n_rerouted)
 
 
 # ----------------------------------------------------------------------

@@ -103,20 +103,34 @@ class CheckpointManager:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         d = self.dir / f"step_{step:09d}"
         manifest = json.loads((d / "manifest.json").read_text())
-        arrays = np.load(d / "arrays.npz")
+        recorded = manifest.get("arrays", {})
         flat_target = _flatten(target_state)
         flat_shard = _flatten(shardings) if shardings is not None else {}
         leaves, treedef = jax.tree_util.tree_flatten(target_state)
         keys = list(_flatten(target_state).keys())
         out_leaves = []
-        for key, tgt in zip(keys, flat_target.values()):
-            a = arrays[key]
-            want = tuple(tgt.shape)
-            if tuple(a.shape) != want:
-                raise ValueError(f"shape mismatch for {key}: {a.shape} vs {want}")
-            arr = jnp.asarray(a)
-            if hasattr(tgt, "dtype"):
-                arr = arr.astype(tgt.dtype)   # restores bf16 from widened fp32
-            s = flat_shard.get(key)
-            out_leaves.append(jax.device_put(arr, s) if s is not None else arr)
+        with np.load(d / "arrays.npz") as arrays:
+            for key, tgt in zip(keys, flat_target.values()):
+                a = arrays[key]
+                want = tuple(tgt.shape)
+                if tuple(a.shape) != want:
+                    raise ValueError(
+                        f"shape mismatch for {key}: {a.shape} vs {want}")
+                stored = recorded.get(key, {}).get("dtype", str(a.dtype))
+                if hasattr(tgt, "dtype"):
+                    tdt = str(tgt.dtype)
+                    # bf16 is widened to f32 on save (npz has no bf16), so a
+                    # float32-on-disk / bfloat16-target pair is the round
+                    # trip, not a mismatch
+                    if stored != tdt and not (tdt == "bfloat16"
+                                              and stored == "float32"):
+                        raise ValueError(
+                            f"dtype mismatch for {key}: checkpoint has "
+                            f"{stored}, target wants {tdt}")
+                arr = jnp.asarray(a)
+                if hasattr(tgt, "dtype"):
+                    arr = arr.astype(tgt.dtype)  # bf16 back from widened fp32
+                s = flat_shard.get(key)
+                out_leaves.append(
+                    jax.device_put(arr, s) if s is not None else arr)
         return jax.tree_util.tree_unflatten(treedef, out_leaves), manifest["extra"]

@@ -31,7 +31,11 @@ class StepMonitor:
         self._t0 = time.perf_counter()
 
     def stop(self) -> float:
+        if self._t0 is None:
+            raise RuntimeError("StepMonitor.stop() before start(): call "
+                               "start() at the top of each step")
         dt = time.perf_counter() - self._t0
+        self._t0 = None
         self.times.append(dt)
         self.times = self.times[-self.window:]
         self.step += 1
@@ -68,13 +72,30 @@ def run_with_restarts(train_loop: Callable[[int], int], ckpt: CheckpointManager,
                       *, max_restarts: int = 3,
                       on_restart: Callable[[int, Exception], None] | None = None) -> int:
     """``train_loop(start_step) -> final_step``; restarts from the latest
-    checkpoint on failure."""
+    checkpoint on failure.
+
+    ``max_restarts`` bounds *consecutive* unproductive restarts: whenever a
+    failed attempt checkpointed past the previous high-water step, the
+    budget resets — a long run peppered with transient faults keeps going,
+    while a crash loop that never advances still raises after
+    ``max_restarts`` tries.
+    """
     restarts = 0
+
+    def latest() -> int:
+        step = ckpt.latest_step()
+        return -1 if step is None else step
+
+    best = latest()
     while True:
-        start = (ckpt.latest_step() or -1) + 1
+        start = latest() + 1
         try:
             return train_loop(start)
         except Exception as e:  # noqa: BLE001 — supervision boundary
+            now = latest()
+            if now > best:      # durable progress since the last failure
+                best = now
+                restarts = 0
             restarts += 1
             if on_restart:
                 on_restart(restarts, e)

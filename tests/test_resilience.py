@@ -1,0 +1,376 @@
+"""Resilience subsystem: seeded fault traces, checkpoint pricing, the
+replay timeline's accounting identity, interval optimization, the
+goodput-under-failures sweep objective, and fleet replica-fault injection.
+
+Determinism contracts asserted here:
+
+* the failure trace is a pure function of (FaultModel, component counts) —
+  independent of the checkpoint schedule, so interval sweeps replay the
+  *same* trace;
+* a full ResilienceReport is bit-identical across runs and across
+  ``sweep(workers=N)``;
+* an inactive fault model with checkpointing off reproduces the
+  failure-free report exactly (goodput == 1.0).
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.api import (
+    AutoscalerSpec, CheckpointSpec, Cluster, FaultModel, FleetSpec,
+    ReplicaFaultSpec, ResilienceSpec, RouterSpec, ServingWorkload, SimSpec,
+    SweepSpace, TrainWorkload, sweep,
+)
+from repro.configs import get_config
+from repro.core import ParallelConfig, Simulator
+from repro.resilience import FailureGen, ResilienceSimulator
+from repro.serving.sim import SLO, LengthDist, ServingSimulator
+
+CFG = get_config("xlstm-125m")
+
+# 32 chips over 4 hosts; host MTBF 1200s -> system MTBF 300s, a handful of
+# failures across the ~800s ideal runtime (400 steps x ~1.9s)
+FAULTS = FaultModel(host_mtbf_s=1200.0, seed=11)
+RES = ResilienceSpec(total_steps=400, faults=FAULTS,
+                     ckpt=CheckpointSpec(interval_steps=10),
+                     chips_per_host=8, restart_delay_s=30.0, repair_s=600.0,
+                     optimize_interval=False)
+
+
+def _sim():
+    return Simulator("tpu_v5e", engine="analytical")
+
+
+def _spec(res):
+    return SimSpec(CFG, cluster=Cluster("tpu_v5e"),
+                   parallel=ParallelConfig(tp=4, dp=8),
+                   workload=TrainWorkload(global_batch=256, seq_len=2048,
+                                          resilience=res))
+
+
+# ---------------- failure traces ----------------
+
+def test_failure_trace_deterministic_and_seed_sensitive():
+    def first(n, seed):
+        gen = FailureGen(FaultModel(host_mtbf_s=3600.0, chip_mtbf_s=1e6,
+                                    seed=seed),
+                         n_chips=16, n_hosts=4, n_links=4)
+        return [gen.pop() for _ in range(n)]
+
+    a, b = first(50, seed=3), first(50, seed=3)
+    assert a == b
+    assert [e.t_s for e in a] == sorted(e.t_s for e in a)
+    assert first(50, seed=4) != a
+
+
+def test_weibull_gaps_keep_configured_mean():
+    gen = FailureGen(FaultModel(host_mtbf_s=100.0, dist="weibull",
+                                weibull_shape=0.7, seed=1),
+                     n_chips=0, n_hosts=1, n_links=0)
+    ts = [gen.pop().t_s for _ in range(4000)]
+    gaps = [b - a for a, b in zip([0.0] + ts, ts)]
+    mean = sum(gaps) / len(gaps)
+    assert mean == pytest.approx(100.0, rel=0.1)
+
+
+def test_inactive_fault_model_yields_no_failures():
+    gen = FailureGen(FaultModel(), n_chips=8, n_hosts=1, n_links=1)
+    assert gen.peek() == math.inf
+    assert not FaultModel().active
+    assert FAULTS.active
+
+
+# ---------------- resilience simulation ----------------
+
+def test_goodput_under_failures_and_accounting_identity():
+    rep = ResilienceSimulator(_sim()).run(_spec(RES))
+    assert rep.completed and rep.steps_done == 400
+    assert 0.0 < rep.goodput < 1.0
+    assert rep.n_restarts > 0 and rep.failure_trace
+    assert rep.n_failures.get("host", 0) > 0
+    # every wall-clock second is attributed to exactly one bucket
+    parts = (rep.useful_s + rep.rework_s + rep.straggler_s
+             + rep.checkpoint_s + rep.downtime_s)
+    assert rep.wall_s == pytest.approx(parts, rel=1e-9)
+    assert rep.wall_s > rep.ideal_s
+    assert rep.n_checkpoints > 0 and rep.checkpoint_s > 0
+
+
+def test_report_bit_deterministic_across_simulators():
+    r1 = ResilienceSimulator(_sim()).run(_spec(RES))
+    r2 = ResilienceSimulator(_sim()).run(_spec(RES))
+    assert r1.summary() == r2.summary()
+    assert r1.failure_trace == r2.failure_trace
+    assert r1.goodput == r2.goodput and r1.wall_s == r2.wall_s
+
+
+def test_trace_independent_of_checkpoint_schedule():
+    dense = ResilienceSimulator(_sim()).run(
+        _spec(dataclasses.replace(RES, ckpt=CheckpointSpec(interval_steps=5))))
+    sparse = ResilienceSimulator(_sim()).run(
+        _spec(dataclasses.replace(RES, ckpt=CheckpointSpec(interval_steps=100))))
+    # failures are exogenous wall-clock events: both runs start from the
+    # same seeded renewal processes (prefix relation — the longer run reads
+    # further into the same stream)
+    n = min(len(dense.failure_trace), len(sparse.failure_trace))
+    assert n > 0
+    assert dense.failure_trace[:n] == sparse.failure_trace[:n]
+
+
+def test_mtbf_infinity_reproduces_failure_free_report():
+    res = ResilienceSpec(total_steps=400, faults=FaultModel(),
+                         ckpt=CheckpointSpec(interval_steps=0),
+                         optimize_interval=False)
+    sim = _sim()
+    rep = ResilienceSimulator(sim).run(_spec(res))
+    plain = sim.run(_spec(None))
+    assert rep.goodput == 1.0
+    assert rep.wall_s == pytest.approx(rep.ideal_s, rel=1e-12)
+    assert rep.failure_trace == () and rep.n_restarts == 0
+    assert rep.downtime_s == 0 and rep.rework_s == 0 and rep.checkpoint_s == 0
+    # the embedded failure-free report is the plain report, bit-identical
+    assert rep.step_report.step_time_us == plain.step_time_us
+    assert rep.step_report.kind_us == plain.kind_us
+    assert rep.tokens_per_s == pytest.approx(
+        plain.tokens_per_step / (plain.step_time_us / 1e6), rel=1e-9)
+
+
+def test_checkpoint_pricing_from_memory_report():
+    sim = _sim()
+    rep = ResilienceSimulator(sim).run(_spec(RES))
+    mem = rep.step_report.memory
+    assert rep.state_bytes_per_device == mem.weights + mem.opt_state
+    # default write path is the cluster interconnect
+    assert rep.write_gbps == pytest.approx(sim.hw.inter.bandwidth / 1e9)
+    assert rep.save_s == pytest.approx(
+        rep.state_bytes_per_device / (rep.write_gbps * 1e9))
+    # explicit write bandwidth overrides, halving bandwidth doubles save_s
+    slow = dataclasses.replace(
+        RES, ckpt=CheckpointSpec(interval_steps=10,
+                                 write_gbps=rep.write_gbps / 2))
+    rep2 = ResilienceSimulator(sim).run(_spec(slow))
+    assert rep2.save_s == pytest.approx(2 * rep.save_s)
+    assert rep2.restore_s == pytest.approx(
+        slow.ckpt.restore_factor * rep2.save_s)
+
+
+def test_async_checkpoint_stalls_less_than_sync():
+    sim = _sim()
+    sync = ResilienceSimulator(sim).run(_spec(RES))
+    async_rep = ResilienceSimulator(sim).run(_spec(dataclasses.replace(
+        RES, ckpt=CheckpointSpec(interval_steps=10, mode="async"))))
+    assert async_rep.checkpoint_s < sync.checkpoint_s
+    parts = (async_rep.useful_s + async_rep.rework_s + async_rep.straggler_s
+             + async_rep.checkpoint_s + async_rep.downtime_s)
+    assert async_rep.wall_s == pytest.approx(parts, rel=1e-9)
+
+
+def test_elastic_resharding_and_spares():
+    sim = _sim()
+    elastic = ResilienceSimulator(sim).run(_spec(RES))
+    # hosts are down for repair_s=600s >> restart_delay: the elastic run
+    # resharded onto fewer hosts and priced degraded steps
+    assert elastic.n_reshards > 0 and elastic.degraded_steps > 0
+    rigid = ResilienceSimulator(sim).run(
+        _spec(dataclasses.replace(RES, elastic=False)))
+    assert rigid.degraded_steps == 0
+    assert rigid.downtime_s > elastic.downtime_s  # waits out every repair
+    spared = ResilienceSimulator(sim).run(
+        _spec(dataclasses.replace(RES, spares=4)))
+    assert spared.n_spare_swaps > 0
+    assert spared.degraded_steps == 0             # swaps keep the mesh full
+    assert spared.goodput > elastic.goodput
+
+
+def test_straggler_slowdown_deterministic():
+    res = dataclasses.replace(RES, straggler_prob=0.05, straggler_mult=2.0)
+    sim = _sim()
+    a = ResilienceSimulator(sim).run(_spec(res))
+    b = ResilienceSimulator(sim).run(_spec(res))
+    assert a.straggler_s > 0
+    assert a.summary() == b.summary()
+    clean = ResilienceSimulator(sim).run(_spec(RES))
+    assert clean.straggler_s == 0
+    assert a.goodput < clean.goodput
+
+
+def test_young_daly_and_simulated_optimum_reported():
+    res = dataclasses.replace(RES, optimize_interval=True)
+    rep = ResilienceSimulator(_sim()).run(_spec(res))
+    yd = rep.young_daly_interval_steps
+    assert yd is not None and yd >= 1
+    # closed form against the report's own inputs
+    base_step_s = rep.step_report.step_time_us / 1e6
+    assert yd == max(1, round(
+        math.sqrt(2.0 * rep.save_s * rep.mtbf_system_s) / base_step_s))
+    assert rep.mtbf_system_s == pytest.approx(1200.0 / 4)
+    opt = rep.simulated_optimal_interval_steps
+    assert opt in rep.goodput_by_interval
+    assert rep.goodput_by_interval[opt] == max(rep.goodput_by_interval.values())
+    # the configured interval is always a candidate
+    assert rep.interval_steps in rep.goodput_by_interval
+
+
+def test_resilience_requires_train_mode():
+    from repro.api import DecodeWorkload
+    spec = SimSpec(CFG, parallel=ParallelConfig(tp=4),
+                   workload=DecodeWorkload(global_batch=8, seq_len=512))
+    with pytest.raises(TypeError, match="TrainWorkload"):
+        ResilienceSimulator(_sim()).run(spec)
+
+
+# ---------------- spec surface ----------------
+
+def test_resilience_spec_json_roundtrip_preserves_hash():
+    spec = _spec(dataclasses.replace(
+        RES, faults=FaultModel(host_mtbf_s=3600.0, chip_mtbf_s=1e7,
+                               dist="weibull", weibull_shape=0.8, seed=9),
+        spares=2, straggler_prob=0.01, straggler_mult=3.0))
+    back = SimSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.json_hash() == spec.json_hash()
+    assert back.workload.resilience.faults.dist == "weibull"
+
+
+def test_fleet_faults_json_roundtrip_and_trivial():
+    fleet = FleetSpec(replicas=2, router=RouterSpec("round_robin"),
+                      faults=ReplicaFaultSpec(mtbf_s=120.0, restart_s=15.0,
+                                              seed=3))
+    spec = SimSpec(CFG, parallel=ParallelConfig(tp=4),
+                   workload=ServingWorkload(n_requests=4, fleet=fleet))
+    back = SimSpec.from_json(spec.to_json())
+    assert back == spec and back.json_hash() == spec.json_hash()
+    assert back.workload.fleet.faults.mtbf_s == 120.0
+    # faults force the fleet path even for a single replica
+    assert not FleetSpec(replicas=1,
+                         faults=ReplicaFaultSpec(mtbf_s=1.0)).trivial
+    assert FleetSpec(replicas=1).trivial
+
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError):
+        FaultModel(host_mtbf_s=-1.0)
+    with pytest.raises(ValueError):
+        FaultModel(dist="lognormal")
+    with pytest.raises(ValueError):
+        CheckpointSpec(mode="mirrored")
+    with pytest.raises(ValueError):
+        ResilienceSpec(total_steps=0)
+    with pytest.raises(ValueError):
+        ReplicaFaultSpec(mtbf_s=-2.0)
+
+
+# ---------------- sweep objective ----------------
+
+def _res_space():
+    base = _spec(dataclasses.replace(
+        RES, total_steps=200, ckpt=CheckpointSpec(interval_steps=50)))
+    return SweepSpace(base, {
+        "workload.resilience.ckpt.interval_steps": (10, 50, 200),
+        "workload.resilience.spares": (0, 1)})
+
+
+def test_sweep_goodput_under_failures_ranks_by_useful_tokens():
+    res = sweep(_res_space(), objective="goodput_under_failures")
+    ranked = res.ranked()
+    assert len(ranked) == 6
+    assert all(r.resilience is not None for r in ranked)
+    rates = [r.resilience.tokens_per_s for r in ranked]
+    assert rates == sorted(rates, reverse=True)
+    # every candidate replayed the same seeded failure trace prefix
+    n = min(len(r.resilience.failure_trace) for r in ranked)
+    assert n > 0
+    first = ranked[0].resilience.failure_trace[:n]
+    assert all(r.resilience.failure_trace[:n] == first for r in ranked)
+
+
+def test_sweep_goodput_under_failures_workers_bit_identical(tmp_path):
+    def key(res):
+        return [(r.spec.json_hash(), r.resilience.goodput,
+                 r.resilience.wall_s, r.resilience.failure_trace)
+                for r in res.ranked()]
+
+    man = tmp_path / "manifest.json"
+    serial = sweep(_res_space(), objective="goodput_under_failures",
+                   manifest=str(man))
+    parallel = sweep(_res_space(), objective="goodput_under_failures",
+                     workers=2)
+    assert key(serial) == key(parallel)
+    import json
+    doc = json.loads(man.read_text())
+    assert doc["objective"] == "goodput_under_failures"
+    rows = doc["candidates"]
+    assert rows and all(row["goodput_under_failures"] is not None
+                        for row in rows if not row["pruned"])
+
+
+def test_sweep_goodput_under_failures_requires_resilience():
+    base = _spec(None)
+    with pytest.raises(TypeError, match="resilience"):
+        sweep(SweepSpace(base, {"tp": (2, 4)}),
+              objective="goodput_under_failures")
+
+
+# ---------------- fleet replica faults ----------------
+
+def _fleet_spec(faults, *, replicas=3, autoscaler=None, n=300):
+    # rate high enough that replicas hold queued/in-flight work when a
+    # failure lands (so displacement + rerouting actually happens)
+    return SimSpec(CFG, cluster=Cluster("tpu_v5e"),
+                   parallel=ParallelConfig(tp=4),
+                   workload=ServingWorkload(
+                       n_requests=n, arrival="poisson", rate_rps=150.0,
+                       prompt=LengthDist("lognormal", median=128.0,
+                                         sigma=0.5, cap=512),
+                       output=LengthDist("lognormal", median=48.0,
+                                         sigma=0.5, cap=192),
+                       seed=5, slo=SLO(ttft_s=0.25, tpot_ms=80.0),
+                       max_batch=16,
+                       fleet=FleetSpec(replicas=replicas,
+                                       router=RouterSpec("least_loaded"),
+                                       autoscaler=autoscaler,
+                                       faults=faults)))
+
+
+def test_fleet_faults_conserve_requests_and_degrade_goodput():
+    sim = _sim()
+    clean = ServingSimulator(sim).run(_fleet_spec(None))
+    assert clean.n_replica_failures == 0 and clean.n_rerouted == 0
+    faulty = ServingSimulator(sim).run(_fleet_spec(
+        ReplicaFaultSpec(mtbf_s=1.0, restart_s=0.5, seed=5)))
+    # conservation: every request still finishes, displaced ones reroute
+    assert faulty.n_requests == 300
+    assert faulty.n_replica_failures > 0 and faulty.n_rerouted > 0
+    assert faulty.slo_attainment < clean.slo_attainment
+    assert faulty.summary()["n_replica_failures"] == faulty.n_replica_failures
+
+
+def test_fleet_fault_trace_bit_deterministic():
+    spec = _fleet_spec(ReplicaFaultSpec(mtbf_s=1.0, restart_s=0.5, seed=5))
+    a = ServingSimulator(_sim()).run(spec)
+    b = ServingSimulator(_sim()).run(spec)
+    assert a.failure_trace == b.failure_trace
+    assert a.goodput_rps == b.goodput_rps
+    assert a.ttft_s == b.ttft_s and a.n_rerouted == b.n_rerouted
+
+
+def test_fleet_faults_with_autoscaler_conserve_requests():
+    asc = AutoscalerSpec(min_replicas=1, max_replicas=4, scale_up_queue=6.0,
+                         scale_down_queue=1.0, interval_s=2.0, cooldown_s=4.0,
+                         provision_s=5.0)
+    rep = ServingSimulator(_sim()).run(_fleet_spec(
+        ReplicaFaultSpec(mtbf_s=1.5, restart_s=0.5, seed=2),
+        replicas=2, autoscaler=asc))
+    assert rep.n_requests == 300
+    assert rep.n_replica_failures > 0
+    for row in rep.failure_trace:
+        assert set(row) == {"t", "replica"}
+
+
+def test_single_replica_with_faults_uses_fleet_path():
+    rep = ServingSimulator(_sim()).run(_fleet_spec(
+        ReplicaFaultSpec(mtbf_s=0.8, restart_s=0.3, seed=1), replicas=1,
+        n=200))
+    assert rep.n_requests == 200
+    assert rep.n_replica_failures > 0   # FleetReport, failures injected

@@ -117,6 +117,116 @@ def test_elastic_plan_rescale():
     assert new.dp == 6 and new.global_batch == 48
 
 
+def test_elastic_plan_rescale_batch_accounting():
+    plan = ElasticPlan(tp=2, pp=2, dp=4, global_batch=32)
+    per_dp = plan.global_batch // plan.dp
+    for chips in (16, 12, 8, 5, 3):
+        new = plan.rescale(chips)
+        assert new.dp == max(chips // 4, 1)
+        # per-replica batch is preserved exactly; global batch follows dp
+        assert new.global_batch == per_dp * new.dp
+        assert new.global_batch % new.dp == 0
+    # even losing everything but one chip leaves a runnable dp=1 plan
+    assert plan.rescale(1).dp == 1
+
+
+def test_step_monitor_stop_before_start_raises():
+    mon = StepMonitor()
+    with pytest.raises(RuntimeError, match="before start"):
+        mon.stop()
+    # and stop() consumes the start: a second stop needs a fresh start
+    mon.start()
+    mon.stop()
+    with pytest.raises(RuntimeError, match="before start"):
+        mon.stop()
+
+
+def test_run_with_restarts_budget_resets_on_progress(tmp_path):
+    # 4 transient failures, each after a *new* checkpoint: with
+    # max_restarts=2 an absolute budget would raise on the 3rd, but the
+    # progress-aware budget keeps going because every attempt advanced.
+    ckpt = CheckpointManager(tmp_path, keep=10)
+    calls = []
+
+    def loop(start):
+        calls.append(start)
+        if len(calls) <= 4:
+            ckpt.save(len(calls) * 10, {"x": jnp.ones(())})
+            raise RuntimeError("transient fault")
+        return 99
+
+    assert run_with_restarts(loop, ckpt, max_restarts=2) == 99
+    assert calls == [0, 11, 21, 31, 41]
+
+
+def test_run_with_restarts_crash_loop_still_raises(tmp_path):
+    # No checkpoint progress between failures -> the budget is NOT reset
+    # and the loop gives up after max_restarts retries.
+    ckpt = CheckpointManager(tmp_path)
+    calls = []
+
+    def loop(start):
+        calls.append(start)
+        raise RuntimeError("persistent fault")
+
+    with pytest.raises(RuntimeError, match="persistent"):
+        run_with_restarts(loop, ckpt, max_restarts=2)
+    assert calls == [0, 0, 0]  # initial try + 2 retries
+
+
+def test_checkpoint_restore_rejects_dtype_mismatch(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    ckpt.save(1, {"w": jnp.ones((2, 2), jnp.float32)})
+    target = {"w": jnp.zeros((2, 2), jnp.int32)}
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        ckpt.restore(target)
+    # bf16 target vs float32 on disk is the save-widening round trip, OK
+    ckpt.save(2, {"b": jnp.ones((3,), jnp.bfloat16)})
+    restored, _ = ckpt.restore({"b": jnp.zeros((3,), jnp.bfloat16)}, step=2)
+    assert restored["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_ignores_leftover_tmp_dir(tmp_path):
+    # a crash mid-write leaves .tmp_step_*; it must be invisible to
+    # all_steps()/latest_step() and a later save of that step must succeed
+    ckpt = CheckpointManager(tmp_path)
+    ckpt.save(3, {"x": jnp.ones(())})
+    crashed = tmp_path / ".tmp_step_000000007"
+    crashed.mkdir()
+    (crashed / "arrays.npz").write_bytes(b"garbage")
+    assert ckpt.all_steps() == [3]
+    assert ckpt.latest_step() == 3
+    ckpt.save(7, {"x": jnp.full((), 2.0)})   # reuses + replaces the tmp dir
+    assert ckpt.all_steps() == [3, 7]
+    restored, _ = ckpt.restore({"x": jnp.zeros(())}, step=7)
+    assert float(restored["x"]) == 2.0
+
+
+def test_checkpoint_async_wait_ordering(tmp_path):
+    ckpt = CheckpointManager(tmp_path, keep=10, async_save=True)
+    state = {"x": jnp.arange(4, dtype=jnp.float32)}
+    # back-to-back async saves: each save waits for the previous writer,
+    # so publishes land in order and wait() makes the last one durable
+    for s in (1, 2, 3):
+        ckpt.save(s, {"x": jnp.full((4,), float(s))})
+    ckpt.wait()
+    assert ckpt.all_steps() == [1, 2, 3]
+    restored, _ = ckpt.restore(state)
+    np.testing.assert_array_equal(restored["x"], np.full((4,), 3.0))
+
+
+def test_checkpoint_resharding_restore_roundtrip(tmp_path):
+    ckpt = CheckpointManager(tmp_path)
+    state = {"w": jnp.arange(8, dtype=jnp.float32).reshape(2, 4)}
+    ckpt.save(1, state)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = {"w": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+    restored, _ = ckpt.restore(jax.tree.map(jnp.zeros_like, state),
+                               shardings=sh)
+    np.testing.assert_array_equal(restored["w"], state["w"])
+    assert restored["w"].sharding.is_equivalent_to(sh["w"], 2)
+
+
 def test_step_monitor_detects_straggler():
     mon = StepMonitor(window=50, z_threshold=2.0)
     import time as _t
