@@ -77,6 +77,10 @@ def _perf_summary(rows: list[dict]) -> dict:
                 r.get("oracle_hit_rate")
         elif bench == "fleet_sim" and case == "fleet_sweep":
             out["fleet_sweep_wall_s"] = r.get("wall_s")
+        elif bench == "fleet_sim" and case == "fleet_obs_overhead":
+            out["obs_overhead_pct"] = r.get("obs_overhead_pct")
+            out["obs_off_requests_per_sec"] = r.get("off_requests_per_sec")
+            out["obs_trace_events"] = r.get("trace_events")
         elif bench == "resilience_sim" and case == "goodput_under_mtbf":
             out["resilience_goodput"] = r.get("goodput")
             out["resilience_timeline_steps_per_sec"] = \

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import time
 from dataclasses import dataclass
 from typing import Callable, Iterable
@@ -37,6 +38,8 @@ from repro.core.explorer import (
     rule_memory_fit,
 )
 from repro.core.simulator import Simulator
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.recorder import NULL_RECORDER
 
 _ALIASES = {"batch": "workload.global_batch", "micro": "parallel.microbatches",
             "hardware": "cluster.hardware", "hw": "cluster.hardware"}
@@ -202,13 +205,23 @@ def _serving_probe(spec: SimSpec) -> SimSpec:
 
 
 def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
-              objective: str, scenario, persist: str | None = None) -> list:
+              objective: str, scenario, persist: str | None = None,
+              timings: list | None = None,
+              progress: Callable | None = None) -> list:
     """Evaluate ``(idx, spec, cand)`` triples in order; returns
     ``(idx, EvalResult)`` pairs.  The single evaluation code path shared by
     the serial sweep and every worker shard — parallel sweeps are
-    bit-identical to serial ones because both run exactly this function."""
+    bit-identical to serial ones because both run exactly this function.
+
+    ``timings`` (a list, when given) collects ``(idx, phase, t0, t1)``
+    wall-clock rows per evaluation stage — the raw material for the sweep's
+    per-worker trace lanes; ``progress`` is called with each
+    :class:`EvalResult` as its step/probe stage completes.  Neither touches
+    the results.
+    """
     results: list[tuple[int, EvalResult]] = []
     for idx, spec, cand in items:
+        t0 = time.time()
         s = _sim_for(spec.cluster, sims, engine, persist)
         # snapshot a lazily-created simulator's counters before its first
         # run: the collectives memo is process-global, not zero at birth
@@ -222,6 +235,11 @@ def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
             res.pruned = True
             res.reason = f"memory {rep.memory.total/1e9:.1f}GB > limit"
         results.append((idx, res))
+        if timings is not None:
+            timings.append((idx, "probe" if serving_mode else "step",
+                            t0, time.time()))
+        if progress is not None:
+            progress(res)
 
     if objective == "goodput":
         # deferred import: repro.serving pulls the real-model serving stack,
@@ -234,6 +252,7 @@ def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
         for idx, res in results:
             if res.pruned:
                 continue
+            t0 = time.time()
             s = _sim_for(res.spec.cluster, sims, engine, persist)
             if res.spec.workload.mode == "serving":
                 # the spec IS the scenario: trace, SLO, policy and fleet all
@@ -242,13 +261,18 @@ def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
                 res.serving = ServingSimulator(s).run(res.spec)
             else:
                 res.serving = scenario.evaluate(s, res.spec.model, res.cand)
+            if timings is not None:
+                timings.append((idx, "serving", t0, time.time()))
     elif objective == "goodput_under_failures":
         from repro.resilience import ResilienceSimulator
         for idx, res in results:
             if res.pruned:
                 continue
+            t0 = time.time()
             s = _sim_for(res.spec.cluster, sims, engine, persist)
             res.resilience = ResilienceSimulator(s).run(res.spec)
+            if timings is not None:
+                timings.append((idx, "resilience", t0, time.time()))
     return results
 
 
@@ -257,18 +281,20 @@ def _sweep_worker(payload: tuple):
 
     Returns the shard's ``(idx, EvalResult)`` pairs plus its cache-stat and
     collectives deltas (each worker owns fresh process-global counters under
-    the default spawn context)."""
+    the default spawn context) and its per-candidate wall-clock timings
+    (epoch seconds — the parent normalizes them into trace lanes)."""
     shard, engine, objective, scenario, persist = payload
     sims: dict[str, Simulator] = {}
     stats0: dict[str, dict] = {}
     coll0 = collective_memo_stats().as_dict()
+    timings: list = []
     results = _evaluate(shard, sims, stats0, engine, objective, scenario,
-                        persist)
+                        persist, timings=timings)
     deltas = [_stats_delta(s.cache_stats(), stats0.get(k, {}))
               for k, s in sims.items()]
     coll1 = collective_memo_stats().as_dict()
     coll = {k: coll1[k] - coll0[k] for k in ("hits", "misses")}
-    return results, _merge_stats(deltas), coll
+    return results, _merge_stats(deltas), coll, timings
 
 
 def _shard_items(items: list, workers: int) -> list[list]:
@@ -308,8 +334,24 @@ def _write_manifest(path: str, space: SweepSpace,
     that produced it."""
     import json
 
+    from repro.obs.explain import (
+        compact_report, compact_resilience, compact_serving,
+    )
+
     def row(res: EvalResult, rank: dict) -> dict:
         h = res.spec.json_hash()
+        # compact attribution: every surviving candidate carries its "why"
+        # (dominant phase / SLO-violation cause / loss bucket) so ranking
+        # flips are explainable straight from the manifest
+        explain = None
+        if not res.pruned:
+            explain = {}
+            if res.report is not None:
+                explain["step"] = compact_report(res.report)
+            if res.serving is not None:
+                explain["serving"] = compact_serving(res.serving)
+            if res.resilience is not None:
+                explain["resilience"] = compact_resilience(res.resilience)
         return {
             "json_hash": h,
             "spec": json.loads(res.spec.to_json()),
@@ -322,6 +364,7 @@ def _write_manifest(path: str, space: SweepSpace,
             "goodput_under_failures": (
                 round(res.resilience.goodput, 6)
                 if res.resilience is not None else None),
+            "explain": explain,
             "rank": rank.get(h),
         }
 
@@ -341,6 +384,7 @@ def _write_manifest(path: str, space: SweepSpace,
         "wall_time_s": round(result.wall_time_s, 3),
         "n_evaluated": len(result.evaluated),
         "n_pruned": len(result.pruned),
+        "metrics": result.metrics or None,
         "ranking": ranking,
         "candidates": [row(r, rank)
                        for r in result.evaluated + result.pruned],
@@ -352,12 +396,48 @@ def _write_manifest(path: str, space: SweepSpace,
         f.write("\n")
 
 
+def _progress_line(reg: MetricsRegistry, n_total: int, t0: float, *,
+                   final: bool = False) -> None:
+    """One stderr progress line, driven entirely by the sweep's metrics
+    registry (configs done, rate, ETA, prune count)."""
+    import sys
+    done = int(reg.counters.get("sweep.configs_done", 0))
+    npruned = int(reg.counters.get("sweep.pruned", 0))
+    el = time.time() - t0
+    rate = done / el if el > 0 else 0.0
+    eta = (n_total - done) / rate if rate > 0 else float("inf")
+    eta_s = f"{eta:.0f}s" if math.isfinite(eta) else "?"
+    print(f"\rsweep {done}/{n_total} configs · {rate:.1f} cfg/s · "
+          f"eta {eta_s} · pruned {npruned}",
+          file=sys.stderr, end="\n" if final else "", flush=True)
+
+
+def _record_sweep_lanes(rec, sweep_t0: float, lane: str, timings: list,
+                        by_idx: dict) -> None:
+    """Per-candidate evaluation spans on one worker's trace lane (timings
+    are epoch seconds from :func:`_evaluate`; normalized to sweep-relative
+    time here), with prune instants carrying their reasons."""
+    if not rec.enabled:
+        return
+    for idx, phase, a, b in timings:
+        res = by_idx.get(idx)
+        args: dict = {"idx": idx}
+        if res is not None:
+            args["json_hash"] = res.spec.json_hash()[:12]
+        rec.span("sweep", lane, f"cand{idx}:{phase}", a - sweep_t0, b - a,
+                 cat="sweep", args=args)
+        if res is not None and res.pruned and phase in ("step", "probe"):
+            rec.instant("sweep", lane, f"prune:cand{idx}", b - sweep_t0,
+                        cat="prune", args={"idx": idx, "reason": res.reason})
+
+
 def sweep(space: SweepSpace, *, sim: Simulator | None = None,
           engine: str = "analytical", rules: list[Callable] | None = None,
           max_evals: int = 10_000, objective: str = "step_time",
           scenario=None, workers: int = 1, persist: str | None = None,
-          mp_context: str = "spawn",
-          manifest: str | None = None) -> ExplorationResult:
+          mp_context: str = "spawn", manifest: str | None = None,
+          recorder=None, metrics: MetricsRegistry | None = None,
+          progress: bool = False) -> ExplorationResult:
     """Enumerate, prune, simulate and rank every spec in ``space``.
 
     ``sim`` seeds the per-hardware simulator registry (its caches stay warm
@@ -392,7 +472,18 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
 
     ``manifest=`` (a file path) writes a JSON provenance record after the
     sweep: the space, every candidate's full spec (keyed by its
-    ``json_hash``), pruned reasons, objective values and the final ranking.
+    ``json_hash``), pruned reasons, objective values, a compact ``explain``
+    attribution per surviving row, the metrics snapshot and the final
+    ranking.
+
+    Observability (all off by default, zero cost when off): ``recorder`` (a
+    :class:`~repro.obs.TraceRecorder`) captures per-worker lanes of
+    per-candidate evaluation spans plus prune instants; ``metrics`` (a
+    :class:`~repro.obs.MetricsRegistry`) accumulates sweep counters — a
+    snapshot always lands in ``ExplorationResult.metrics`` and the
+    manifest; ``progress=True`` prints a stderr progress line (configs
+    done, rate, ETA, prune counts) as candidates complete.  None of the
+    three changes results or rankings.
     """
     if objective not in ("step_time", "goodput", "goodput_under_failures"):
         raise ValueError(f"unknown objective {objective!r}")
@@ -415,6 +506,8 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
             "a ServingWorkload base carries its own trace/SLO/policy; "
             "scenario= would be ignored — drop one of the two")
     rules = list(DEFAULT_RULES if rules is None else rules)
+    reg = metrics if metrics is not None else MetricsRegistry()
+    rec = recorder if recorder is not None else NULL_RECORDER
     t0 = time.time()
     coll0 = collective_memo_stats().as_dict()
     pruned: list[EvalResult] = []
@@ -435,6 +528,12 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
         if reason:
             pruned.append(EvalResult(cand, None, pruned=True, reason=reason,
                                      spec=spec))
+            reg.inc("sweep.pruned")
+            reg.inc("sweep.pruned_rules")
+            if rec.enabled:
+                rec.instant("sweep", "prune", "prune:rule", 0.0, cat="prune",
+                            args={"json_hash": spec.json_hash()[:12],
+                                  "reason": reason})
             continue
         cands.append((spec, cand))
 
@@ -444,6 +543,14 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
     n_groups = len({s.reuse_key() for s, _ in cands})
     items = [(i, spec, cand)
              for i, (spec, cand) in enumerate(cands[:max_evals])]
+
+    def count_result(res: EvalResult) -> None:
+        reg.inc("sweep.configs_done")
+        if res.pruned:
+            reg.inc("sweep.pruned")
+            reg.inc("sweep.pruned_memory")
+        else:
+            reg.inc("sweep.evaluated")
 
     workers = max(int(workers), 1)
     if workers > 1 and len(items) > 1:
@@ -456,36 +563,52 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
         shard_results: list = []
         with cf.ProcessPoolExecutor(max_workers=len(shards),
                                     mp_context=ctx) as pool:
-            for results, stats, wcoll in pool.map(
+            for k, (results, stats, wcoll, wtimings) in enumerate(pool.map(
                     _sweep_worker,
                     [(s, engine, objective, scenario, persist)
-                     for s in shards]):
+                     for s in shards])):
                 shard_results.extend(results)
+                for _, res in results:
+                    count_result(res)
+                for _, phase, a, b in wtimings:
+                    reg.observe(f"sweep.eval_s.{phase}", b - a)
+                _record_sweep_lanes(rec, t0, f"worker{k}", wtimings,
+                                    dict(results))
                 for layer, st in stats.items():
                     acc = merged.setdefault(layer, {"hits": 0, "misses": 0})
                     acc["hits"] += st["hits"]
                     acc["misses"] += st["misses"]
-                for k in coll:
-                    coll[k] += wcoll[k]
+                for k2 in coll:
+                    coll[k2] += wcoll[k2]
+                if progress:
+                    _progress_line(reg, len(items), t0)
         shard_results.sort(key=lambda r: r[0])   # restore serial order
         evaluated = []
         for _, res in shard_results:
             (pruned if res.pruned else evaluated).append(res)
         wall = time.time() - t0
         merged["collectives"] = coll
-        result = ExplorationResult(
-            evaluated, pruned, wall, n_groups=n_groups,
-            configs_per_sec=(len(items) / wall) if wall > 0 else 0.0,
-            cache_stats=merged, objective=objective, workers=workers)
     else:
         sims: dict[str, Simulator] = {}
         if sim is not None:
             sims[sim.hw.name] = sim
         stats0 = {k: s.cache_stats() for k, s in sims.items()}
         evaluated = []
-        for _, res in _evaluate(items, sims, stats0, engine, objective,
-                                scenario, persist):
+        timings: list = []
+
+        def on_result(res: EvalResult) -> None:
+            count_result(res)
+            if progress:
+                _progress_line(reg, len(items), t0)
+
+        eval_results = _evaluate(items, sims, stats0, engine, objective,
+                                 scenario, persist, timings=timings,
+                                 progress=on_result)
+        for _, res in eval_results:
             (pruned if res.pruned else evaluated).append(res)
+        for _, phase, a, b in timings:
+            reg.observe(f"sweep.eval_s.{phase}", b - a)
+        _record_sweep_lanes(rec, t0, "worker0", timings, dict(eval_results))
         if persist:
             for s in sims.values():
                 s.save_cache()
@@ -497,10 +620,19 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
         coll1 = collective_memo_stats().as_dict()
         merged["collectives"] = {k: coll1[k] - coll0[k]
                                  for k in ("hits", "misses")}
-        result = ExplorationResult(
-            evaluated, pruned, wall, n_groups=n_groups,
-            configs_per_sec=(len(items) / wall) if wall > 0 else 0.0,
-            cache_stats=merged, objective=objective)
+    if progress:
+        _progress_line(reg, len(items), t0, final=True)
+    reg.set("sweep.n_groups", n_groups)
+    reg.set("sweep.wall_s", round(wall, 6))
+    reg.set("sweep.configs_per_sec",
+            round(len(items) / wall, 4) if wall > 0 else 0.0)
+    reg.update_nested(merged, prefix="sweep.cache")
+    result = ExplorationResult(
+        evaluated, pruned, wall, n_groups=n_groups,
+        configs_per_sec=(len(items) / wall) if wall > 0 else 0.0,
+        cache_stats=merged, objective=objective,
+        workers=workers if (workers > 1 and len(items) > 1) else 1,
+        metrics=reg.snapshot())
     if manifest:
         _write_manifest(manifest, space, result)
     return result

@@ -152,6 +152,9 @@ class ExplorationResult:
     cache_stats: dict = field(default_factory=dict)  # per-layer hits/misses
     objective: str = "step_time"
     workers: int = 1                                # sweep evaluation processes
+    # MetricsRegistry snapshot of the sweep (counters/histograms); filled by
+    # sweep(), empty for the legacy explore() path
+    metrics: dict = field(default_factory=dict)
 
     def pareto(self, x=lambda r: r.tps_per_user, y=lambda r: r.tps_per_chip
                ) -> list[EvalResult]:

@@ -27,7 +27,10 @@ class MemoryReport:
     kv_cache: float = 0.0
     collective_buffers: float = 0.0
     total: float = 0.0
-    timeline: list[tuple[float, float]] = field(default_factory=list)  # (op_idx, live_bytes)
+    # (op_idx, live_bytes) liveness curve.  Immutable on purpose: the walk
+    # is cached (SimCache "memory" bucket) and shared across reports, so a
+    # mutable list here would let one consumer poison every sibling report.
+    timeline: tuple[tuple[float, float], ...] = ()
 
     def summary(self) -> dict:
         return {k: getattr(self, k) for k in
@@ -67,14 +70,15 @@ def block_liveness(block_fwd: Graph, block_joint: Graph | None,
     This is the only part of the memory report that touches the block graph
     — everything else is closed-form arithmetic — so it is what the
     simulator memoizes (SimCache ``memory`` bucket) across sweep candidates
-    that share a transformed first block.  Results are treated as immutable
-    by consumers (the timeline list may be shared between reports).
+    that share a transformed first block.  The timeline is returned as a
+    tuple so the shared cached value is immutable by construction (a
+    consumer mutating its report cannot poison the cache bucket).
     """
     g = block_joint if (mode == "train" and block_joint is not None) \
         else block_fwd
     peak, timeline = graph_liveness_peak(g, record_timeline=True)
     interior = block_fwd.total("bytes_out", phase="fwd")
-    return peak, timeline, interior
+    return peak, tuple(timeline), interior
 
 
 def simulate_memory(block_fwd: Graph, *, n_layers: int, param_bytes: float,
@@ -110,7 +114,7 @@ def simulate_memory(block_fwd: Graph, *, n_layers: int, param_bytes: float,
             opt /= max(dp, 1)
         r.opt_state = opt
         # live activations inside one block's fwd+bwd (peak during backward)
-        r.timeline = tl
+        r.timeline = tuple(tl)
         if remat == "none":
             # every layer's interior activations are saved
             r.saved_activations = interior * n_layers
@@ -118,7 +122,7 @@ def simulate_memory(block_fwd: Graph, *, n_layers: int, param_bytes: float,
             r.saved_activations = boundary_bytes * n_layers
         r.activations_peak = peak_block
     else:
-        r.timeline = tl
+        r.timeline = tuple(tl)
         r.activations_peak = peak_block
         r.kv_cache = kv_cache_bytes
     r.collective_buffers = COLLECTIVE_BUFFER_BYTES

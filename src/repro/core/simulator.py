@@ -71,6 +71,19 @@ class Report:
     def ttft_ms(self) -> float:
         return self.step_time_us / 1e3 if self.mode == "prefill" else float("nan")
 
+    # ---- attribution (repro.obs.explain) ----
+    def explain(self, top_k: int = 8) -> str:
+        """Plain-text attribution: phase breakdown, top-k op kinds,
+        compute-vs-comm split; with ``keep_timelines=True`` reports also
+        the critical path, per-op comm bytes and exposed-comm overlap."""
+        from repro.obs.explain import render_report
+        return render_report(self, top_k=top_k)
+
+    def explain_dict(self, top_k: int = 8) -> dict:
+        """Structured form of :meth:`explain` (what sweep manifests embed)."""
+        from repro.obs.explain import explain_report
+        return explain_report(self, top_k=top_k)
+
 
 def shard_memory_floor(cfg: ModelConfig, par: ParallelConfig, B_local: int,
                        mode: str, cache_len: int) -> tuple[float, float]:
@@ -173,6 +186,18 @@ class Simulator:
         # module-level memo: counters aggregate over all simulators
         out["collectives"] = collective_memo_stats().as_dict()
         return out
+
+    def metrics_registry(self, registry=None):
+        """Fill a :class:`~repro.obs.MetricsRegistry` (created when None)
+        with every stats surface this simulator exposes — the one-call form
+        of the scattered ``cache_stats()`` / extrapolation dicts.  Snapshot
+        before and after a run and ``MetricsRegistry.diff`` the two to cost
+        just that run."""
+        from repro.obs import MetricsRegistry
+        if registry is None:
+            registry = MetricsRegistry()
+        registry.update_from_simulator(self)
+        return registry
 
     def cache_clear(self) -> None:
         self.cache.clear()
@@ -284,10 +309,17 @@ class Simulator:
         return self.cache.get("block_times", skey, build)
 
     # ------------------------------------------------------------------
-    def run(self, spec, *, keep_timelines: bool = False) -> Report:
+    def run(self, spec, *, keep_timelines: bool = False,
+            recorder=None) -> Report:
         """Simulate one :class:`repro.api.spec.SimSpec` — the primary entry
         point.  The spec's cluster must name this simulator's hardware;
-        serving workloads belong to ``ServingSimulator.run``."""
+        serving workloads belong to ``ServingSimulator.run``.
+
+        ``recorder`` (a :class:`~repro.obs.TraceRecorder`) captures the
+        priced block timelines and pipeline schedule as trace lanes; it
+        forces ``keep_timelines=True`` internally (there is nothing to
+        record without them) but the returned report is numerically
+        identical to the fast path either way."""
         if spec.cluster.hardware != self.hw.name:
             raise ValueError(
                 f"simulator built for {self.hw.name!r} cannot run a spec for "
@@ -296,6 +328,12 @@ class Simulator:
         if getattr(w, "mode", None) == "serving":
             raise TypeError("serving workloads are request-level: use "
                             "ServingSimulator(sim).run(spec)")
+        if recorder is not None and recorder.enabled:
+            from repro.core.timeline import record_report
+            rep = self._simulate(spec.model, par=spec.parallel,
+                                 keep_timelines=True, **w.sim_kwargs())
+            record_report(recorder, rep)
+            return rep
         if keep_timelines or not self.cache.persistent:
             return self._simulate(spec.model, par=spec.parallel,
                                   keep_timelines=keep_timelines,

@@ -2,7 +2,11 @@
 
 ``to_chrome_trace`` emits a single-rank timeline; ``pp_trace`` emits the 3D
 multi-GPU view (pid = "dp{i}|pp{j}", tid = stream) from a PPSchedule plus
-per-rank op timelines.  Load the JSON in chrome://tracing or Perfetto.
+per-rank op timelines; ``record_report`` pushes a whole core
+:class:`~repro.core.simulator.Report` (every block timeline + the pipeline
+schedule) into a :class:`~repro.obs.TraceRecorder`, which is how core-step
+runs join the unified observability trace.  Load the JSON in
+chrome://tracing or Perfetto.
 """
 from __future__ import annotations
 
@@ -20,7 +24,11 @@ _CAT = {"matmul": "compute", "attention": "compute", "fused": "compute",
 
 
 def to_chrome_trace(tl: Timeline, *, pid: str = "rank0",
-                    expand_limit: int = 20000) -> list[dict]:
+                    expand_limit: int = 20000, metrics=None) -> list[dict]:
+    """Timeline -> chrome events.  Timelines beyond ``expand_limit``
+    intervals are truncated, *loudly*: a trailing metadata instant carries
+    the dropped count (and a ``trace.dropped_intervals`` counter is bumped
+    on ``metrics`` when one is given) — no silent caps."""
     events = []
     for iv in tl.intervals[:expand_limit]:
         events.append({
@@ -29,6 +37,18 @@ def to_chrome_trace(tl: Timeline, *, pid: str = "rank0",
             "args": {"kind": iv.kind, "phase": iv.phase, "engine": iv.engine,
                      "repeat": iv.repeat, "comm_bytes": iv.comm_bytes},
         })
+    dropped = len(tl.intervals) - expand_limit
+    if dropped > 0:
+        events.append({
+            "name": "charon:trace_truncated", "cat": "meta", "ph": "i",
+            "s": "p", "ts": events[-1]["ts"] + events[-1]["dur"],
+            "pid": pid, "tid": "meta",
+            "args": {"dropped_intervals": dropped,
+                     "expand_limit": expand_limit,
+                     "total_intervals": len(tl.intervals)},
+        })
+        if metrics is not None:
+            metrics.inc("trace.dropped_intervals", dropped)
     return events
 
 
@@ -42,6 +62,31 @@ def pp_trace(sched: PPSchedule, *, dp_rank: int = 0) -> list[dict]:
             "args": {"microbatch": e.microbatch, "kind": e.kind},
         })
     return events
+
+
+def record_report(recorder, report, *, pid: str = "core",
+                  expand_limit: int = 20000, metrics=None) -> None:
+    """Push a core step report's timelines into a recorder: one lane group
+    per block kind (``pid/<kind>``) plus the pipeline schedule when the
+    report has one.  Requires a report produced with
+    ``keep_timelines=True`` — without timelines there is nothing to record
+    (``Simulator.run(spec, recorder=...)`` arranges this automatically)."""
+    if not recorder.enabled:
+        return
+    for kind, tl in report.block_timelines.items():
+        recorder.extend(to_chrome_trace(tl, pid=f"{pid}/{kind}",
+                                        expand_limit=expand_limit,
+                                        metrics=metrics))
+    if report.pp is not None:
+        recorder.extend(pp_trace(report.pp))
+
+
+def merge_traces(*event_lists: list[dict]) -> list[dict]:
+    """Merge chrome event lists into one, sorted by timestamp (stable, so
+    equal timestamps keep their per-source order)."""
+    out = [e for evs in event_lists for e in evs]
+    out.sort(key=lambda e: e.get("ts", 0.0))
+    return out
 
 
 def write_trace(events: list[dict], path: str | Path):

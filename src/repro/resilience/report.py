@@ -70,6 +70,12 @@ class ResilienceReport:
     step_report: Report | None = None
     failure_trace: tuple[FailureEvent, ...] = ()
 
+    def explain_dict(self) -> dict:
+        """Compact attribution (what sweep manifests embed): goodput,
+        per-bucket wall-clock fractions, the dominant loss bucket."""
+        from repro.obs.explain import compact_resilience
+        return compact_resilience(self)
+
     def summary(self) -> dict:
         """Flat dict for benchmarks and manifests."""
         return {

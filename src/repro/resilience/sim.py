@@ -50,7 +50,16 @@ class ResilienceSimulator:
         self.sim = sim
 
     # ------------------------------------------------------------------
-    def run(self, spec: SimSpec) -> ResilienceReport:
+    def run(self, spec: SimSpec, *, recorder=None,
+            metrics=None) -> ResilienceReport:
+        """Price ``spec`` under its failure model.
+
+        ``recorder`` captures the bucket partition of the *configured*
+        interval's replay as colored trace spans (interval-grid candidates
+        replayed for ``optimize_interval`` are not recorded — one timeline
+        per run); ``metrics`` accumulates failure/restart/checkpoint
+        counters.  Reports are bit-identical with either on or off.
+        """
         w = spec.workload
         if getattr(w, "mode", None) != "train":
             raise TypeError(
@@ -85,9 +94,10 @@ class ResilienceSimulator:
         price = self._make_pricer(spec, rspec, base, n_hosts)
         stragglers = _straggler_table(rspec, n_hosts)
 
-        def one(interval: int) -> ReplayStats:
+        def one(interval: int, rec=None) -> ReplayStats:
             # a fresh generator per replay: every interval candidate sees
             # the identical seeded trace
+            from repro.obs.recorder import NULL_RECORDER
             gen = FailureGen(rspec.faults, n_chips=chips, n_hosts=n_hosts,
                              n_links=n_hosts)
             return replay(
@@ -99,10 +109,11 @@ class ResilienceSimulator:
                 async_overhead=rspec.ckpt.async_overhead,
                 restart_delay_s=rspec.restart_delay_s,
                 repair_s=rspec.repair_s,
-                max_wall_s=rspec.max_wall_factor * max(ideal_s, 1e-9))
+                max_wall_s=rspec.max_wall_factor * max(ideal_s, 1e-9),
+                rec=rec if rec is not None else NULL_RECORDER)
 
         interval = rspec.ckpt.interval_steps
-        st = one(interval)
+        st = one(interval, rec=recorder)
 
         # system MTBF and the Young/Daly closed form, in steps
         rate = 0.0
@@ -131,6 +142,15 @@ class ResilienceSimulator:
             sim_opt = max(sorted(by_interval),
                           key=lambda c: (by_interval[c], -c))
 
+        if metrics is not None:
+            metrics.inc("resilience.failures", sum(st.n_failures.values()))
+            for kind, n in st.n_failures.items():
+                metrics.inc(f"resilience.failures.{kind}", n)
+            metrics.inc("resilience.restarts", st.n_restarts)
+            metrics.inc("resilience.checkpoints", st.n_checkpoints)
+            metrics.inc("resilience.reshards", st.n_reshards)
+            metrics.inc("resilience.degraded_steps", st.degraded_steps)
+            metrics.observe("resilience.goodput", _goodput(st))
         return ResilienceReport(
             goodput=_goodput(st), wall_s=st.wall_s, ideal_s=ideal_s,
             completed=st.completed, steps_done=st.steps_done,

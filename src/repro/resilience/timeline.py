@@ -24,6 +24,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable
 
+from repro.obs.recorder import CNAMES, NULL_RECORDER
 from repro.resilience.faults import FailureEvent, FailureGen
 
 # steps are counted as "completed steps so far", so checkpoint boundaries
@@ -58,7 +59,7 @@ def replay(*, total_steps: int, interval: int,
            n_hosts: int, min_hosts: int, spares: int, elastic: bool,
            save_s: float, restore_s: float, sync: bool,
            async_overhead: float, restart_delay_s: float, repair_s: float,
-           max_wall_s: float) -> ReplayStats:
+           max_wall_s: float, rec=NULL_RECORDER) -> ReplayStats:
     """Replay ``total_steps`` priced steps against the failure trace.
 
     ``price(hosts) -> (base_step_s, tokens_per_step)`` for a mesh of
@@ -66,6 +67,12 @@ def replay(*, total_steps: int, interval: int,
     hosts)`` is the gang-max slowdown of that step index on that mesh
     (``None`` = no stragglers).  ``interval == 0`` means never checkpoint:
     any failure rolls back to step 0.
+
+    ``rec`` (a :class:`~repro.obs.TraceRecorder`) captures the bucket
+    partition as colored trace spans — useful/rework step windows (known
+    only retroactively, at commit vs. wipe), straggler tails, checkpoint
+    stalls, downtime windows, failure instants.  The stats are identical
+    with recording on or off.
     """
     st = ReplayStats()
     wall = 0.0
@@ -77,7 +84,22 @@ def replay(*, total_steps: int, interval: int,
     pending: tuple[float, int] | None = None   # async (durable_at, step)
     # steps since the last durable checkpoint: (step_count, base_s, tokens)
     uncommitted: list[tuple[int, float, float]] = []
+    # trace-only mirror of ``uncommitted``: (step_count, start_s, base_dur)
+    # — useful vs. rework is decided retroactively, so open step windows
+    # stay here until a commit (useful span) or a failure wipe (rework span)
+    windows: list[tuple[int, float, float]] = []
     prev_price_hosts: int | None = None
+    _PID = "resilience"
+
+    def flush_windows(upto: int, cname_key: str):
+        keep = []
+        for (i, s0, d) in windows:
+            if i <= upto:
+                rec.span(_PID, "steps", f"step{i}", s0, d, cat="bucket",
+                         cname=CNAMES[cname_key])
+            else:
+                keep.append((i, s0, d))
+        windows[:] = keep
 
     def commit(upto: int):
         nonlocal last_ckpt
@@ -91,6 +113,8 @@ def replay(*, total_steps: int, interval: int,
         uncommitted[:] = keep
         last_ckpt = upto
         st.n_checkpoints += 1
+        if rec.enabled:
+            flush_windows(upto, "useful")
 
     def check_async(now: float):
         nonlocal pending
@@ -120,6 +144,9 @@ def replay(*, total_steps: int, interval: int,
     def record(ev: FailureEvent):
         st.events.append(ev)
         st.n_failures[ev.kind] = st.n_failures.get(ev.kind, 0) + 1
+        if rec.enabled:
+            rec.instant(_PID, "faults", f"FAILURE:{ev.kind}", ev.t_s,
+                        cat="fault", args={"kind": ev.kind})
 
     def handle_failure(ev: FailureEvent):
         nonlocal wall, step, pending, hosts, spares_free
@@ -133,6 +160,8 @@ def replay(*, total_steps: int, interval: int,
         for (_, b, _tok) in uncommitted:   # wiped: replayed from last_ckpt
             st.rework_s += b
         uncommitted.clear()
+        if rec.enabled:
+            flush_windows(total_steps + 1, "rework")  # wipe: all are rework
 
         def restart_end(t: float) -> float:
             return t + restart_delay_s + (restore_s if last_ckpt > 0 else 0.0)
@@ -164,6 +193,10 @@ def replay(*, total_steps: int, interval: int,
             spares_free -= 1
             st.n_spare_swaps += 1
         st.downtime_s += end - ev.t_s
+        if rec.enabled:
+            rec.span(_PID, "downtime", f"restart:{ev.kind}", ev.t_s,
+                     end - ev.t_s, cat="bucket", cname=CNAMES["downtime"],
+                     args={"rollback_to_step": last_ckpt, "hosts": hosts})
         wall = end
         step = last_ckpt
 
@@ -182,9 +215,19 @@ def replay(*, total_steps: int, interval: int,
         if failgen.peek() <= wall + dt:
             ev = failgen.pop()
             st.rework_s += ev.t_s - wall   # the partial step is wiped too
+            if rec.enabled and ev.t_s > wall:
+                rec.span(_PID, "steps", f"step{step + 1}:partial", wall,
+                         ev.t_s - wall, cat="bucket", cname=CNAMES["rework"])
             wall = ev.t_s
             handle_failure(ev)
             continue
+        if rec.enabled:
+            windows.append((step + 1, wall, base_s))
+            if dt > base_s:
+                rec.span(_PID, "straggler", f"step{step + 1}:straggle",
+                         wall + base_s, dt - base_s, cat="bucket",
+                         cname=CNAMES["straggler"],
+                         args={"mult": round(mult, 4)})
         wall += dt
         step += 1
         uncommitted.append((step, base_s, tokens))
@@ -197,9 +240,17 @@ def replay(*, total_steps: int, interval: int,
             if failgen.peek() <= wall + stall:
                 ev = failgen.pop()
                 st.checkpoint_s += ev.t_s - wall
+                if rec.enabled and ev.t_s > wall:
+                    rec.span(_PID, "checkpoint", f"save@{step}:partial",
+                             wall, ev.t_s - wall, cat="bucket",
+                             cname=CNAMES["checkpoint"])
                 wall = ev.t_s
                 handle_failure(ev)
                 continue
+            if rec.enabled and stall > 0:
+                rec.span(_PID, "checkpoint", f"save@{step}", wall, stall,
+                         cat="bucket", cname=CNAMES["checkpoint"],
+                         args={"mode": "sync" if sync else "async"})
             wall += stall
             st.checkpoint_s += stall
             if sync:
@@ -214,6 +265,8 @@ def replay(*, total_steps: int, interval: int,
         st.useful_s += b
         st.useful_tokens += tok
     uncommitted.clear()
+    if rec.enabled:
+        flush_windows(total_steps + 1, "useful")
     st.wall_s = wall
     st.steps_done = step
     if not math.isfinite(wall):

@@ -113,6 +113,19 @@ class ServingReport:
     # per-replica serving results are replica-level; FleetReport overrides
     system_level: ClassVar[bool] = False
 
+    # ---- attribution (repro.obs.explain) ----
+    def explain(self, top_k: int = 8) -> str:
+        """Plain-text attribution: dominant SLO-violation cause (queueing vs
+        prefill vs decode), queue-delay share of TTFT, step mix, busiest
+        lanes."""
+        from repro.obs.explain import render_serving
+        return render_serving(self, top_k=top_k)
+
+    def explain_dict(self, top_k: int = 8) -> dict:
+        """Structured form of :meth:`explain` (what sweep manifests embed)."""
+        from repro.obs.explain import explain_serving
+        return explain_serving(self, top_k=top_k)
+
     def summary(self) -> dict:
         """Flat dict for benchmarks / examples."""
         return {
@@ -181,6 +194,21 @@ class FleetReport:
     @property
     def n_replica_failures(self) -> int:
         return len(self.failure_trace)
+
+    @property
+    def utilization(self) -> dict:
+        """Alias so fleet and single-replica reports expose the same lane
+        map to :func:`repro.obs.explain.explain_serving`."""
+        return self.replica_utilization
+
+    def explain(self, top_k: int = 8) -> str:
+        """Plain-text attribution — see :meth:`ServingReport.explain`."""
+        from repro.obs.explain import render_serving
+        return render_serving(self, top_k=top_k)
+
+    def explain_dict(self, top_k: int = 8) -> dict:
+        from repro.obs.explain import explain_serving
+        return explain_serving(self, top_k=top_k)
 
     @staticmethod
     def build(finished_by: list, replicas: list, slo: SLO | None, router: str,

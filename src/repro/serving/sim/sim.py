@@ -30,6 +30,7 @@ from dataclasses import dataclass, field
 from repro.configs.base import ModelConfig
 from repro.core.passes.base import ParallelConfig
 from repro.core.simulator import Simulator
+from repro.obs.recorder import CNAMES, NULL_RECORDER
 from repro.serving.sim.events import (
     ARRIVAL, AUTOSCALE, FAILURE, RECOVER, STEP_DONE, EventQueue,
 )
@@ -72,6 +73,45 @@ def make_pools(policy) -> tuple[list[Pool], float]:
                 Pool("decode", DecodeOnly(policy.decode_batch),
                      role="decode")], policy.transfer_s
     return [Pool("engine", policy)], 0.0
+
+
+def record_request_lanes(rec, reqs, *, pid: str = "requests",
+                         metrics=None) -> None:
+    """Emit per-request trace lanes: queued → prefill → decode spans, one
+    ``tid`` per request.  Lanes beyond ``rec.max_request_lanes`` (a 100k
+    request trace would mean 100k Perfetto tracks) are dropped *loudly*: a
+    metadata instant carries the dropped count and a
+    ``trace.dropped_request_lanes`` counter is bumped when ``metrics`` is
+    given."""
+    if not rec.enabled:
+        return
+    cap = rec.max_request_lanes
+    shown = sorted(reqs, key=lambda r: r.rid)
+    dropped = max(len(shown) - cap, 0)
+    for r in shown[:cap]:
+        tid = f"req{r.rid}"
+        q0 = r.enqueue_s if r.enqueue_s is not None else r.arrival_s
+        if r.start_s is not None:
+            if r.start_s > q0:
+                rec.span(pid, tid, "queued", q0, r.start_s - q0,
+                         cat="request", cname="grey")
+            if r.first_token_s is not None:
+                rec.span(pid, tid, "prefill", r.start_s,
+                         r.first_token_s - r.start_s, cat="request",
+                         args={"prompt_len": r.prompt_len})
+                if r.finished_s is not None and r.output_len > 1:
+                    rec.span(pid, tid, "decode", r.first_token_s,
+                             r.finished_s - r.first_token_s, cat="request",
+                             args={"output_len": r.output_len})
+    if dropped > 0:
+        last = max((r.finished_s or r.arrival_s for r in shown),
+                   default=0.0)
+        rec.instant(pid, "meta", "charon:request_lanes_truncated", last,
+                    args={"dropped_requests": dropped,
+                          "max_request_lanes": cap,
+                          "total_requests": len(shown)})
+        if metrics is not None:
+            metrics.inc("trace.dropped_request_lanes", dropped)
 
 
 def price_step_s(oracle: StepOracle, plan: StepPlan) -> float:
@@ -137,7 +177,8 @@ class ServingSimulator:
 
     # ------------------------------------------------------------------
     def run(self, workload, *, slo: SLO | None = None,
-            max_steps: int = 2_000_000) -> ServingReport:
+            max_steps: int = 2_000_000, recorder=None,
+            metrics=None) -> ServingReport:
         """Replay a request trace and aggregate a :class:`ServingReport`.
 
         Accepts either a legacy :class:`Workload` (with the policy/model
@@ -147,6 +188,12 @@ class ServingSimulator:
         spec whose workload carries a non-trivial
         :class:`~repro.api.spec.FleetSpec` is delegated to
         :class:`FleetSimulator` and returns a :class:`FleetReport`.
+
+        ``recorder`` (a :class:`~repro.obs.TraceRecorder`) collects engine
+        step spans and per-request lanes; ``metrics`` (a
+        :class:`~repro.obs.MetricsRegistry`) accumulates step/request
+        counters and the oracle hit/miss delta.  Both default to off and
+        cost nothing when off — the report is bit-identical either way.
         """
         from repro.api.spec import SimSpec
         if isinstance(workload, SimSpec):
@@ -163,15 +210,19 @@ class ServingSimulator:
                     f"spec for cluster hardware {spec.cluster.hardware!r}")
             if not w.fleet.trivial:
                 return FleetSimulator(self.sim).run(spec, slo=slo,
-                                                    max_steps=max_steps)
+                                                    max_steps=max_steps,
+                                                    recorder=recorder,
+                                                    metrics=metrics)
             inner = ServingSimulator(self.sim, spec.model, par=spec.parallel,
                                      policy=w.make_policy(),
                                      ctx_floor=w.ctx_floor)
             return inner.run(w.build(), slo=slo if slo is not None else w.slo,
-                             max_steps=max_steps)
+                             max_steps=max_steps, recorder=recorder,
+                             metrics=metrics)
         if self.oracle is None:
             raise TypeError("ServingSimulator was built without a model "
                             "config; pass a SimSpec to run()")
+        rec = recorder if recorder is not None else NULL_RECORDER
         reqs = sorted((r.reset_copy() for r in workload.requests),
                       key=lambda r: r.arrival_s)
         pools, transfer_s = self._pools()
@@ -222,6 +273,11 @@ class ServingSimulator:
                 pool.phase_s[plan.kind] = pool.phase_s.get(plan.kind, 0.0) + dt
                 pool.steps_by_kind[plan.kind] = \
                     pool.steps_by_kind.get(plan.kind, 0) + 1
+                if rec.enabled:
+                    rec.span("serving", pool.name, plan.kind, now, dt,
+                             cat="step",
+                             args={"n_prefill": len(plan.prefill),
+                                   "n_decode": len(plan.decode)})
                 evq.push(now + dt, STEP_DONE, (pool, plan))
         if len(finished) != len(reqs):
             raise RuntimeError(
@@ -232,7 +288,16 @@ class ServingSimulator:
                  for k in ("hits", "misses")}
         delta["hit_rate"] = round(
             delta["hits"] / max(delta["hits"] + delta["misses"], 1), 4)
-        return ServingReport.build(finished, pools, slo, delta)
+        record_request_lanes(rec, finished, pid="serving/requests",
+                             metrics=metrics)
+        rep = ServingReport.build(finished, pools, slo, delta)
+        if metrics is not None:
+            metrics.inc("serving.requests", len(finished))
+            metrics.inc("serving.steps", steps)
+            for k, n in rep.steps_by_kind.items():
+                metrics.inc(f"serving.steps.{k}", n)
+            metrics.update_nested(delta, prefix="serving.oracle")
+        return rep
 
 
 # ----------------------------------------------------------------------
@@ -374,7 +439,8 @@ class FleetSimulator:
 
     def _finish(self, rep: ReplicaPool, pool: Pool, plan: StepPlan,
                 now: float, evq: EventQueue, serve: list[ReplicaPool],
-                decode_router, finished_by: list[list]) -> None:
+                decode_router, finished_by: list[list],
+                rec=NULL_RECORDER) -> None:
         pool.busy = False
         for r, chunk in plan.prefill:
             r.prefilled += chunk
@@ -392,10 +458,20 @@ class FleetSimulator:
                     # fleet-level disaggregation: migrate to a decode replica
                     target = decode_router.route(
                         r, self._routable(serve, now), now)
+                    if rec.enabled:
+                        rec.instant(f"replica{rep.index}", "kv_transfer",
+                                    "kv_transfer", now, cat="migration",
+                                    args={"rid": r.rid, "to": target.index,
+                                          "transfer_s": rep.transfer_s})
                     evq.push(now + rep.transfer_s, ARRIVAL,
                              (target, target.entry, r))
                 elif pool.role == "prefill":
                     # per-replica DisaggregatedPD: decode pool is a sibling
+                    if rec.enabled:
+                        rec.instant(f"replica{rep.index}", "kv_transfer",
+                                    "kv_transfer", now, cat="migration",
+                                    args={"rid": r.rid, "to": rep.index,
+                                          "transfer_s": rep.transfer_s})
                     evq.push(now + rep.transfer_s, ARRIVAL,
                              (rep, rep.pools[1], r))
                 else:
@@ -409,7 +485,8 @@ class FleetSimulator:
 
     # ------------------------------------------------------------------
     def run(self, workload, *, slo: SLO | None = None,
-            max_steps: int = 50_000_000) -> FleetReport:
+            max_steps: int = 50_000_000, recorder=None,
+            metrics=None) -> FleetReport:
         """Replay a trace through the fleet and aggregate a
         :class:`FleetReport`.
 
@@ -418,6 +495,11 @@ class FleetSimulator:
         :class:`~repro.api.spec.ServingWorkload` supplies model,
         parallelism, policy, trace, SLO and :class:`FleetSpec` — the spec
         form of "sweep disaggregation ratios × replica counts".
+
+        ``recorder`` collects per-replica step-span lanes, per-request
+        lanes, KV-transfer migration instants, autoscaler actions and
+        FAILURE/RECOVER/reroute instants; ``metrics`` accumulates fleet
+        counters.  Both default to off and cost nothing when off.
         """
         from repro.api.spec import SimSpec
         if isinstance(workload, SimSpec):
@@ -435,10 +517,12 @@ class FleetSimulator:
                                    policy=w.make_policy(), fleet=w.fleet,
                                    ctx_floor=w.ctx_floor)
             return inner.run(w.build(), slo=slo if slo is not None else w.slo,
-                             max_steps=max_steps)
+                             max_steps=max_steps, recorder=recorder,
+                             metrics=metrics)
         if self.oracle is None:
             raise TypeError("FleetSimulator was built without a model "
                             "config; pass a SimSpec to run()")
+        rec = recorder if recorder is not None else NULL_RECORDER
         f = self.fleet
         reqs = sorted((r.reset_copy() for r in workload.requests),
                       key=lambda r: r.arrival_s)
@@ -505,7 +589,7 @@ class FleetSimulator:
                     continue                 # step killed by a failure
                 before = len(finished_by[rep.index])
                 self._finish(rep, pool, plan, now, evq, serve, decode_router,
-                             finished_by)
+                             finished_by, rec)
                 n_finished += len(finished_by[rep.index]) - before
             elif ev.kind == FAILURE:
                 (frep,) = ev.payload
@@ -536,12 +620,35 @@ class FleetSimulator:
                     n_rerouted += 1
                     target = router.route(r, self._routable(entry, now), now)
                     target.entry.queue.append(r)
+                    if rec.enabled:
+                        rec.instant("fleet", "faults", "reroute", now,
+                                    cat="fault",
+                                    args={"rid": r.rid, "from": frep.index,
+                                          "to": target.index})
                     if target not in replan:
                         replan.append(target)
+                if rec.enabled:
+                    rec.instant("fleet", "faults", f"FAILURE r{frep.index}",
+                                now, cat="fault",
+                                args={"replica": frep.index,
+                                      "displaced": len(displaced),
+                                      "restart_s": faults.restart_s})
+                    rec.span(f"replica{frep.index}", "downtime", "down", now,
+                             faults.restart_s, cat="fault",
+                             cname=CNAMES["downtime"])
             elif ev.kind == RECOVER:
                 (rep,) = ev.payload          # replan it (gated if re-failed)
+                if rec.enabled:
+                    rec.instant("fleet", "faults", f"RECOVER r{rep.index}",
+                                now, cat="fault", args={"replica": rep.index})
             else:                            # AUTOSCALE
+                n_actions0 = len(scaler.trace)
                 scaler.tick(now, serve)
+                if rec.enabled:
+                    for entry_row in scaler.trace[n_actions0:]:
+                        rec.instant("fleet", "autoscaler",
+                                    entry_row["action"], now, cat="autoscale",
+                                    args=dict(entry_row))
                 if remaining > 0 or n_finished < len(reqs):
                     evq.push(now + f.autoscaler.interval_s, AUTOSCALE, ())
             if rep is not None:
@@ -574,6 +681,11 @@ class FleetSimulator:
                         pool.phase_s.get(plan.kind, 0.0) + dt
                     pool.steps_by_kind[plan.kind] = \
                         pool.steps_by_kind.get(plan.kind, 0) + 1
+                    if rec.enabled:
+                        rec.span(f"replica{prep.index}", pool.name,
+                                 plan.kind, now, dt, cat="step",
+                                 args={"n_prefill": len(plan.prefill),
+                                       "n_decode": len(plan.decode)})
                     evq.push(now + dt, STEP_DONE, (prep, pool, plan,
                                                    prep.epoch))
         if n_finished != len(reqs):
@@ -587,10 +699,24 @@ class FleetSimulator:
         delta["hit_rate"] = round(
             delta["hits"] / max(delta["hits"] + delta["misses"], 1), 4)
         delta["distinct_steps"] = self.oracle.n_distinct_steps
-        return FleetReport.build(
+        record_request_lanes(
+            rec, [r for chunk in finished_by for r in chunk],
+            pid="fleet/requests", metrics=metrics)
+        frep = FleetReport.build(
             finished_by, replicas, slo, router.name,
             scaler.trace if scaler is not None else [], delta,
             failure_trace=failure_trace, n_rerouted=n_rerouted)
+        if metrics is not None:
+            metrics.inc("fleet.requests", n_finished)
+            metrics.inc("fleet.steps", steps)
+            for k, n in frep.steps_by_kind.items():
+                metrics.inc(f"fleet.steps.{k}", n)
+            metrics.inc("fleet.failures", len(failure_trace))
+            metrics.inc("fleet.rerouted", n_rerouted)
+            metrics.inc("fleet.autoscale_actions",
+                        len(frep.autoscaler_trace))
+            metrics.update_nested(delta, prefix="fleet.oracle")
+        return frep
 
 
 # ----------------------------------------------------------------------

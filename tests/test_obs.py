@@ -1,0 +1,340 @@
+"""Observability layer: trace recorder schema, zero-overhead-when-off
+bit-identity, metrics registry, explain() attribution, sweep progress.
+
+Contracts asserted here:
+
+* every exported trace is Perfetto-loadable: required keys on every event,
+  microsecond timestamps sorted non-decreasing, non-negative durations,
+  JSON round-trip;
+* ``recorder=None`` (the default) and an attached ``MetricsRegistry``
+  change no report field — observability is a pure tap on all four
+  simulators (core step, serving, fleet, resilience);
+* truncation is loud: the interval expander and the per-request lanes emit
+  a ``charon:*_truncated`` metadata instant and bump a metrics counter
+  instead of silently dropping events;
+* the resilience timeline's colored spans partition wall time the same way
+  the report's bucket accounting does.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.api import (
+    CheckpointSpec, Cluster, FaultModel, FleetSpec, ResilienceSpec,
+    RouterSpec, ServingWorkload, SimSpec, SweepSpace, TrainWorkload, sweep,
+)
+from repro.configs import get_config
+from repro.core import ParallelConfig, Simulator
+from repro.obs import (
+    CNAMES, NULL_RECORDER, HistStat, MetricsRegistry, TraceRecorder,
+    compact_report, critical_path, explain_report,
+)
+from repro.resilience import ResilienceSimulator
+from repro.serving.sim import SLO, LengthDist, ServingSimulator
+
+CFG = get_config("xlstm-125m")
+PAR = ParallelConfig(tp=2)
+SHORT = dict(prompt=LengthDist("lognormal", median=64.0, sigma=0.6, cap=256),
+             output=LengthDist("lognormal", median=12.0, sigma=0.5, cap=48))
+
+
+def _sim():
+    return Simulator("tpu_v5e", engine="analytical")
+
+
+def _step_spec():
+    return SimSpec(CFG, cluster=Cluster("tpu_v5e"), parallel=PAR,
+                   workload=TrainWorkload(global_batch=32, seq_len=512))
+
+
+def _serving_spec(n=120, fleet=None, **kw):
+    if fleet is not None:
+        kw["fleet"] = fleet
+    kw.setdefault("rate_rps", 48.0)
+    return SimSpec(CFG, cluster=Cluster("tpu_v5e"), parallel=PAR,
+                   workload=ServingWorkload(
+                       n_requests=n, seed=3,
+                       slo=SLO(ttft_s=1.0, tpot_ms=50.0),
+                       **SHORT, **kw))
+
+
+def _resilience_spec():
+    # 32 chips over 4 hosts, system MTBF ~300s across an ~800s run: a
+    # handful of failures, rework, downtime and straggler tails all occur
+    res = ResilienceSpec(
+        total_steps=400, faults=FaultModel(host_mtbf_s=1200.0, seed=11),
+        ckpt=CheckpointSpec(interval_steps=10), chips_per_host=8,
+        restart_delay_s=30.0, repair_s=600.0, straggler_prob=0.05,
+        straggler_mult=1.5, optimize_interval=False)
+    return SimSpec(CFG, cluster=Cluster("tpu_v5e"),
+                   parallel=ParallelConfig(tp=4, dp=8),
+                   workload=TrainWorkload(global_batch=256, seq_len=2048,
+                                          resilience=res))
+
+
+def _assert_perfetto_valid(events):
+    assert events, "trace is empty"
+    last_ts = -1.0
+    for ev in events:
+        for key in ("name", "ph", "ts", "pid", "tid"):
+            assert key in ev, f"event missing {key}: {ev}"
+        assert ev["ph"] in ("X", "i", "C", "M")
+        assert ev["ts"] >= last_ts, "timestamps must be non-decreasing"
+        last_ts = ev["ts"]
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+
+
+# ---------------- recorder primitives ----------------
+
+def test_recorder_schema_and_roundtrip(tmp_path):
+    rec = TraceRecorder()
+    rec.span("p", "t", "a", 1.0, 0.5, cat="step", args={"k": 1})
+    rec.span("p", "t", "b", 0.5, 0.25, cname=CNAMES["useful"])
+    rec.instant("p", "t2", "evt", 0.75)
+    rec.counter("p", "q", 2.0, {"depth": 3})
+    events = rec.events()
+    _assert_perfetto_valid(events)
+    # seconds in, microseconds out
+    assert events[0]["ts"] == pytest.approx(0.5e6)
+    assert events[-1]["name"] in ("a", "q")
+    doc = rec.to_json()
+    assert set(doc) >= {"traceEvents", "displayTimeUnit"}
+    assert json.loads(json.dumps(doc)) == doc
+    path = tmp_path / "trace.json"
+    rec.write(path)
+    assert json.loads(path.read_text())["traceEvents"] == events
+
+
+def test_recorder_clamps_negative_durations():
+    rec = TraceRecorder()
+    rec.span("p", "t", "x", 1.0, -0.5)
+    assert rec.events()[0]["dur"] == 0.0
+
+
+def test_null_recorder_is_disabled_and_inert():
+    assert NULL_RECORDER.enabled is False
+    NULL_RECORDER.span("p", "t", "x", 0.0, 1.0)
+    NULL_RECORDER.instant("p", "t", "x", 0.0)
+    assert NULL_RECORDER.events() == []
+    # an empty *enabled* recorder is falsy (len 0) but must still record:
+    # code paths guard on `is not None` / `.enabled`, never truthiness
+    rec = TraceRecorder()
+    assert len(rec) == 0 and rec.enabled
+
+
+# ---------------- metrics registry ----------------
+
+def test_metrics_registry_counters_histograms_diff():
+    reg = MetricsRegistry()
+    reg.inc("a.b")
+    reg.inc("a.b", 2)
+    reg.set("gauge", 7.5)
+    reg.observe("lat", 1.0)
+    reg.observe("lat", 3.0)
+    snap = reg.snapshot()
+    assert snap["counters"]["a.b"] == 3.0 and snap["counters"]["gauge"] == 7.5
+    lat = snap["histograms"]["lat"]
+    assert lat["count"] == 2 and lat["total"] == 4.0
+    assert lat["min"] == 1.0 and lat["max"] == 3.0
+    before = snap
+    reg.inc("a.b", 5)
+    d = MetricsRegistry.diff(reg.snapshot(), before)
+    assert d["counters"]["a.b"] == 5.0
+    h = HistStat()
+    h.observe(2.0)
+    assert h.as_dict()["count"] == 1
+
+
+def test_metrics_update_nested_flattens():
+    reg = MetricsRegistry()
+    reg.update_nested({"pricing": {"hits": 4, "misses": 1}}, prefix="cache")
+    snap = reg.snapshot()["counters"]
+    assert snap["cache.pricing.hits"] == 4.0
+    assert snap["cache.pricing.misses"] == 1.0
+
+
+# ---------------- core step simulator ----------------
+
+def test_core_run_bit_identical_and_traced():
+    spec = _step_spec()
+    rep_off = _sim().run(spec)
+    rec = TraceRecorder()
+    rep_on = _sim().run(spec, recorder=rec)
+    # recording forces keep_timelines, so compare the priced fields (the
+    # timelines are the recorder's input, not part of the pricing contract)
+    for f in ("step_time_us", "tokens_per_s", "tps_per_chip", "mfu",
+              "breakdown_us", "kind_us"):
+        assert getattr(rep_on, f) == getattr(rep_off, f), f
+    events = rec.events()
+    _assert_perfetto_valid(events)
+    # per-kind lanes exist and spans carry compute/comm categories
+    cats = {ev.get("cat") for ev in events if ev["ph"] == "X"}
+    assert cats & {"compute", "comm"}
+
+
+def test_report_explain_and_compact():
+    rep = _sim().run(_step_spec())
+    text = rep.explain()
+    assert "top ops" in text.lower() or "op" in text.lower()
+    d = rep.explain_dict()
+    assert d["top_ops_by_time_us"]
+    c = compact_report(rep)
+    assert set(c) >= {"dominant_phase", "compute_frac", "comm_frac"}
+    assert 0.0 <= c["compute_frac"] <= 1.0
+
+
+def test_critical_path_covers_timeline():
+    sim = _sim()
+    rep = sim.run(_step_spec(), keep_timelines=True)
+    d = explain_report(rep)
+    assert d["top_ops_by_time_us"][0][1] > 0.0
+    cp = d["critical_path"]
+    assert cp["n_ops"] == len(critical_path(
+        max(rep.block_timelines.values(), key=lambda t: t.total_time)))
+    assert cp["total_us"] > 0.0
+
+
+# ---------------- serving + fleet ----------------
+
+def test_serving_bit_identical_with_recorder_and_metrics():
+    spec = _serving_spec()
+    rep_off = ServingSimulator(_sim()).run(spec)
+    rec, reg = TraceRecorder(), MetricsRegistry()
+    rep_on = ServingSimulator(_sim()).run(spec, recorder=rec, metrics=reg)
+    assert rep_on.summary() == rep_off.summary()
+    _assert_perfetto_valid(rec.events())
+    snap = reg.snapshot()["counters"]
+    assert snap["serving.requests"] == spec.workload.n_requests
+    assert snap["serving.steps"] > 0
+    # request lanes: queued/prefill/decode spans on per-request tids
+    req_tids = {ev["tid"] for ev in rec.events()
+                if ev["pid"].endswith("requests")}
+    assert any(t.startswith("req") for t in req_tids)
+
+
+def test_request_lane_truncation_is_loud():
+    spec = _serving_spec(n=40)
+    rec, reg = TraceRecorder(max_request_lanes=4), MetricsRegistry()
+    ServingSimulator(_sim()).run(spec, recorder=rec, metrics=reg)
+    names = {ev["name"] for ev in rec.events()}
+    assert "charon:request_lanes_truncated" in names
+    assert reg.snapshot()["counters"]["trace.dropped_request_lanes"] == 40 - 4
+    lanes = {ev["tid"] for ev in rec.events()
+             if ev["pid"].endswith("requests") and ev["ph"] == "X"}
+    assert len(lanes) == 4
+
+
+def test_fleet_bit_identical_and_lanes():
+    fleet = FleetSpec(replicas=3, router=RouterSpec("least_loaded"))
+    spec = _serving_spec(n=150, fleet=fleet)
+    rep_off = ServingSimulator(_sim()).run(spec)
+    rec, reg = TraceRecorder(), MetricsRegistry()
+    rep_on = ServingSimulator(_sim()).run(spec, recorder=rec, metrics=reg)
+    assert rep_on.summary() == rep_off.summary()
+    events = rec.events()
+    _assert_perfetto_valid(events)
+    pids = {ev["pid"] for ev in events}
+    assert {"replica0", "replica1", "replica2"} <= pids
+    assert reg.snapshot()["counters"]["fleet.requests"] == 150
+    d = rep_on.explain_dict()
+    assert "dominant_violation" in d or "slo" in json.dumps(d).lower()
+
+
+def test_serving_explain_names_dominant_cause():
+    rep = ServingSimulator(_sim()).run(_serving_spec(n=150, rate_rps=400.0))
+    text = rep.explain()
+    assert isinstance(text, str) and text
+    d = rep.explain_dict()
+    assert json.loads(json.dumps(d)) == d    # manifest-embeddable
+
+
+# ---------------- resilience ----------------
+
+def test_resilience_bit_identical_and_span_partition():
+    spec = _resilience_spec()
+    rep_off = ResilienceSimulator(_sim()).run(spec)
+    rec, reg = TraceRecorder(), MetricsRegistry()
+    rep_on = ResilienceSimulator(_sim()).run(spec, recorder=rec, metrics=reg)
+    assert rep_on.summary() == rep_off.summary()
+    events = rec.events()
+    _assert_perfetto_valid(events)
+    # colored useful spans must re-derive the report's useful_s bucket
+    useful_us = sum(ev["dur"] for ev in events
+                    if ev.get("cname") == CNAMES["useful"])
+    assert useful_us / 1e6 == pytest.approx(rep_on.useful_s, rel=1e-9)
+    assert rep_on.n_failures and reg.snapshot()["counters"]["resilience.failures"] == \
+        sum(rep_on.n_failures.values())
+    names = {ev["name"] for ev in events}
+    assert any(n.startswith("FAILURE:") for n in names)
+    d = rep_on.explain_dict()
+    assert d["dominant_loss"] in ("rework", "checkpoint", "downtime",
+                                  "straggler", None)
+    assert sum(d["bucket_fracs"].values()) == pytest.approx(1.0, abs=2e-3)
+
+
+# ---------------- chrome-trace exporter ----------------
+
+def test_chrome_trace_truncation_is_loud():
+    from repro.core.timeline import to_chrome_trace
+    sim = _sim()
+    rep = sim.run(_step_spec(), keep_timelines=True)
+    tl = next(iter(rep.block_timelines.values()))
+    reg = MetricsRegistry()
+    events = to_chrome_trace(tl, expand_limit=2, metrics=reg)
+    names = {ev["name"] for ev in events}
+    assert "charon:trace_truncated" in names
+    assert reg.snapshot()["counters"]["trace.dropped_intervals"] > 0
+    full = to_chrome_trace(tl)
+    assert len(full) > len(events)
+
+
+def test_merge_traces_sorts():
+    from repro.core.timeline import merge_traces
+    a = [{"name": "x", "ph": "i", "ts": 5.0, "pid": "p", "tid": "t", "s": "t"}]
+    b = [{"name": "y", "ph": "i", "ts": 1.0, "pid": "p", "tid": "t", "s": "t"}]
+    merged = merge_traces(a, b)
+    assert [ev["ts"] for ev in merged] == [1.0, 5.0]
+
+
+# ---------------- memory report aliasing (regression) ----------------
+
+def test_memory_timeline_is_immutable_tuple():
+    rep = _sim().run(_step_spec())
+    assert isinstance(rep.memory.timeline, tuple)
+    for entry in rep.memory.timeline:
+        assert isinstance(entry, tuple)
+
+
+# ---------------- sweep ----------------
+
+def test_sweep_metrics_trace_and_progress(capsys):
+    space = SweepSpace(_step_spec(), {
+        "parallel.tp": (2,), "workload.global_batch": (16, 32, 64)})
+    rec, reg = TraceRecorder(), MetricsRegistry()
+    res = sweep(space, sim=_sim(), recorder=rec, metrics=reg, progress=True)
+    err = capsys.readouterr().err
+    assert "sweep 3/3" in err and "cfg/s" in err
+    assert res.metrics["counters"]["sweep.configs_done"] == 3.0
+    assert res.metrics["counters"]["sweep.evaluated"] == len(res.evaluated)
+    events = rec.events()
+    _assert_perfetto_valid(events)
+    assert any(ev["tid"].startswith("worker") for ev in events)
+    # identical ranking with observability off
+    res_off = sweep(space, sim=_sim())
+    key = lambda r: r.cand.key()
+    assert [key(r) for r in res.ranked()] == [key(r) for r in res_off.ranked()]
+    assert res_off.metrics["counters"]["sweep.configs_done"] == 3.0
+
+
+def test_sweep_manifest_rows_carry_explain(tmp_path):
+    space = SweepSpace(_step_spec(), {"workload.global_batch": (16, 32)})
+    manifest = tmp_path / "m.json"
+    res = sweep(space, sim=_sim(), manifest=str(manifest))
+    doc = json.loads(manifest.read_text())
+    assert doc["metrics"]["counters"]["sweep.configs_done"] == 2.0
+    rows = [r for r in doc["candidates"] if not r["pruned"]]
+    assert rows and all(r["explain"]["step"]["dominant_phase"]
+                        for r in rows)
+    assert res.evaluated
