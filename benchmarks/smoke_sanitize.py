@@ -1,0 +1,75 @@
+"""Sanitizer smoke: run representative tiny cases under CHARON_SANITIZE=1.
+
+CI runs this with the env knob set; locally it forces sanitize mode on
+regardless.  Deliberately standalone — it must NOT go through
+``benchmarks/run.py`` (which rewrites BENCH_sim.json and would skew the
+committed throughput baselines the regression guards compare against).
+
+Covers the three cache surfaces the sanitizer wraps:
+
+* core ``Simulator.run`` (ingest/passes/block_times/memory/reports
+  buckets), cold then warm, plus a tiny sweep (bench_explore's shape at
+  toy scale) so the sweep path's cache hits are re-verified too;
+* the serving ``StepOracle`` front memos + serving bucket via a
+  request-level run;
+* ``check_determinism`` on both specs (cold/warm/uncached/pickled
+  bit-identity).
+
+Exits non-zero on any CacheSanitizerError / determinism mismatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+os.environ.setdefault("CHARON_SANITIZE", "1")
+
+from repro.analysis.sanitize import check_determinism, sanitize_enabled
+from repro.api import (Cluster, DecodeWorkload, ServingWorkload, SimSpec,
+                       SweepSpace, TrainWorkload, sweep)
+from repro.configs import get_config
+from repro.core import Simulator
+
+
+def main() -> int:
+    assert sanitize_enabled(), "CHARON_SANITIZE not set"
+    cfg = dataclasses.replace(get_config("gemma-7b"), name="sanitize-tiny",
+                              num_layers=2, d_model=128, num_heads=2,
+                              num_kv_heads=2, d_ff=256, vocab_size=512)
+    sim = Simulator("tpu_v5e", engine="analytical")
+    from repro.analysis.sanitize import SanitizingSimCache
+    assert isinstance(sim.cache, SanitizingSimCache), \
+        "env knob did not activate the sanitizing cache"
+
+    train = SimSpec(cfg, cluster=Cluster("tpu_v5e", chips=4),
+                    workload=TrainWorkload(global_batch=8, seq_len=128))
+    cold = sim.run(train)
+    warm = sim.run(train)
+    assert cold == warm, "warm run diverged under sanitizer"
+    print(f"train step {cold.step_time_us:.1f} us (warm verified)")
+
+    base = SimSpec(cfg, cluster=Cluster("tpu_v5e", chips=4),
+                   workload=DecodeWorkload(seq_len=256))
+    res = sweep(SweepSpace(base, {"tp": (1, 2), "batch": (8, 16)}), sim=sim)
+    assert res.evaluated, "sweep produced no candidates"
+    print(f"sweep: {len(res.evaluated)} evaluated, "
+          f"{len(res.pruned)} pruned (every cache hit re-verified)")
+
+    serving = SimSpec(cfg, workload=ServingWorkload(
+        n_requests=40, rate_rps=40.0, seed=3, max_batch=8))
+    from repro.serving.sim import ServingSimulator
+    srep = ServingSimulator(sim).run(serving)
+    assert srep.n_requests == 40
+    print(f"serving: {srep.n_requests} requests, oracle memo hits verified")
+
+    for name, spec in (("train", train), ("serving", serving)):
+        rep = check_determinism(spec, raise_on_mismatch=True)
+        print(f"determinism[{name}]: {rep.render()}")
+
+    print("sanitize smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,17 @@
+"""Correctness tooling for the Charon repro.
+
+Two layers:
+
+* :mod:`repro.analysis.lint` — charon-lint, an AST-based static analyzer
+  (stdlib ``ast`` only) encoding the repo-specific invariants R1-R5; run it
+  as ``python -m repro.analysis.lint src/``.
+* :mod:`repro.analysis.sanitize` — runtime cache-poisoning detector
+  (``CHARON_SANITIZE=1`` / ``Simulator(sanitize=True)``) and the
+  :func:`check_determinism` harness.
+
+This package must stay importable without jax: the lint CLI runs in a bare
+CI job.  Keep heavy imports inside :mod:`repro.analysis.sanitize`.
+"""
+from __future__ import annotations
+
+__all__ = ["lint", "sanitize"]

@@ -27,12 +27,12 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
-import time
 from dataclasses import dataclass
 from typing import Callable, Iterable
 
 from repro.api.spec import ServingWorkload, SimSpec
 from repro.core.backend.collectives import collective_memo_stats
+from repro.obs.clock import wall_s
 from repro.core.explorer import (
     Candidate, DEFAULT_RULES, EvalResult, ExplorationResult, _stats_delta,
     rule_memory_fit,
@@ -221,7 +221,7 @@ def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
     """
     results: list[tuple[int, EvalResult]] = []
     for idx, spec, cand in items:
-        t0 = time.time()
+        t0 = wall_s()
         s = _sim_for(spec.cluster, sims, engine, persist)
         # snapshot a lazily-created simulator's counters before its first
         # run: the collectives memo is process-global, not zero at birth
@@ -237,7 +237,7 @@ def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
         results.append((idx, res))
         if timings is not None:
             timings.append((idx, "probe" if serving_mode else "step",
-                            t0, time.time()))
+                            t0, wall_s()))
         if progress is not None:
             progress(res)
 
@@ -252,7 +252,7 @@ def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
         for idx, res in results:
             if res.pruned:
                 continue
-            t0 = time.time()
+            t0 = wall_s()
             s = _sim_for(res.spec.cluster, sims, engine, persist)
             if res.spec.workload.mode == "serving":
                 # the spec IS the scenario: trace, SLO, policy and fleet all
@@ -262,17 +262,17 @@ def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
             else:
                 res.serving = scenario.evaluate(s, res.spec.model, res.cand)
             if timings is not None:
-                timings.append((idx, "serving", t0, time.time()))
+                timings.append((idx, "serving", t0, wall_s()))
     elif objective == "goodput_under_failures":
         from repro.resilience import ResilienceSimulator
         for idx, res in results:
             if res.pruned:
                 continue
-            t0 = time.time()
+            t0 = wall_s()
             s = _sim_for(res.spec.cluster, sims, engine, persist)
             res.resilience = ResilienceSimulator(s).run(res.spec)
             if timings is not None:
-                timings.append((idx, "resilience", t0, time.time()))
+                timings.append((idx, "resilience", t0, wall_s()))
     return results
 
 
@@ -403,7 +403,7 @@ def _progress_line(reg: MetricsRegistry, n_total: int, t0: float, *,
     import sys
     done = int(reg.counters.get("sweep.configs_done", 0))
     npruned = int(reg.counters.get("sweep.pruned", 0))
-    el = time.time() - t0
+    el = wall_s() - t0
     rate = done / el if el > 0 else 0.0
     eta = (n_total - done) / rate if rate > 0 else float("inf")
     eta_s = f"{eta:.0f}s" if math.isfinite(eta) else "?"
@@ -508,7 +508,7 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
     rules = list(DEFAULT_RULES if rules is None else rules)
     reg = metrics if metrics is not None else MetricsRegistry()
     rec = recorder if recorder is not None else NULL_RECORDER
-    t0 = time.time()
+    t0 = wall_s()
     coll0 = collective_memo_stats().as_dict()
     pruned: list[EvalResult] = []
     cands: list[tuple[SimSpec, Candidate]] = []
@@ -586,7 +586,7 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
         evaluated = []
         for _, res in shard_results:
             (pruned if res.pruned else evaluated).append(res)
-        wall = time.time() - t0
+        wall = wall_s() - t0
         merged["collectives"] = coll
     else:
         sims: dict[str, Simulator] = {}
@@ -613,7 +613,7 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
             for s in sims.values():
                 s.save_cache()
 
-        wall = time.time() - t0
+        wall = wall_s() - t0
         deltas = [_stats_delta(s.cache_stats(), stats0.get(k, {}))
                   for k, s in sims.items()]
         merged = _merge_stats(deltas)
@@ -628,7 +628,7 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
             round(len(items) / wall, 4) if wall > 0 else 0.0)
     reg.update_nested(merged, prefix="sweep.cache")
     result = ExplorationResult(
-        evaluated, pruned, wall, n_groups=n_groups,
+        tuple(evaluated), tuple(pruned), wall, n_groups=n_groups,
         configs_per_sec=(len(items) / wall) if wall > 0 else 0.0,
         cache_stats=merged, objective=objective,
         workers=workers if (workers > 1 and len(items) > 1) else 1,

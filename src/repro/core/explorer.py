@@ -144,8 +144,10 @@ DEFAULT_RULES: list[Callable] = [rule_divisibility, rule_tp_too_wide, rule_pp_la
 
 @dataclass
 class ExplorationResult:
-    evaluated: list[EvalResult]
-    pruned: list[EvalResult]
+    # tuples: sweep results are shared (manifest writers, notebooks, the
+    # legacy explore() shim) — immutability keeps them consistent
+    evaluated: tuple
+    pruned: tuple
     wall_time_s: float
     n_groups: int = 0                               # distinct reuse groups
     configs_per_sec: float = 0.0

@@ -26,28 +26,35 @@ def _overlap(a: Interval, b: Interval) -> float:
 def apply_ratio_overlap(tl: Timeline, hw: HardwareSpec) -> Timeline:
     """Ratio-based slowdown: only the overlapped fraction of an op is slowed
     (paper: 'the slowdown factor only applies to the portion overlapped')."""
-    comp = [i for i in tl.intervals if i.stream == "compute"]
-    comm = [i for i in tl.intervals if i.stream != "compute"]
-    extra: dict[int, float] = {}
-    for c in comm:
-        for k in comp:
-            ov = _overlap(c, k)
+    # Intervals are mutable (unhashable) objects, so slowdown accumulators
+    # are keyed by timeline position — stable across runs and processes,
+    # unlike the id()-keyed dicts this replaced.
+    ivs = tl.intervals
+    comp_idx = [i for i, iv in enumerate(ivs) if iv.stream == "compute"]
+    comm_idx = [i for i, iv in enumerate(ivs) if iv.stream != "compute"]
+    extra = [0.0] * len(ivs)
+    for ci in comm_idx:
+        c = ivs[ci]
+        for ki in comp_idx:
+            ov = _overlap(c, ivs[ki])
             if ov <= 0:
                 continue
-            extra[id(k)] = extra.get(id(k), 0.0) + ov * (hw.overlap_slowdown_compute - 1.0)
-            extra[id(c)] = extra.get(id(c), 0.0) + ov * (hw.overlap_slowdown_comm - 1.0)
-    for i, c1 in enumerate(comm):
-        for c2 in comm[i + 1:]:
+            extra[ki] += ov * (hw.overlap_slowdown_compute - 1.0)
+            extra[ci] += ov * (hw.overlap_slowdown_comm - 1.0)
+    for a, ci in enumerate(comm_idx):
+        c1 = ivs[ci]
+        for cj in comm_idx[a + 1:]:
+            c2 = ivs[cj]
             if c1.stream == c2.stream:
                 continue
             ov = _overlap(c1, c2)
             if ov <= 0:
                 continue
             s = hw.overlap_slowdown_comm_comm - 1.0
-            extra[id(c1)] = extra.get(id(c1), 0.0) + ov * s
-            extra[id(c2)] = extra.get(id(c2), 0.0) + ov * s
-    for iv in tl.intervals:
-        iv.end += extra.get(id(iv), 0.0)
+            extra[ci] += ov * s
+            extra[cj] += ov * s
+    for i, iv in enumerate(ivs):
+        iv.end += extra[i]
     return tl
 
 
@@ -60,41 +67,44 @@ def bandwidth_aware_comm(comm_intervals: list[Interval]) -> list[Interval]:
     flows = sorted(comm_intervals, key=lambda i: i.start)
     if not flows:
         return []
-    remaining = {id(f): max(f.comm_bytes, 1e-9) for f in flows}
-    rate1 = {id(f): max(f.comm_bytes, 1e-9) / max(f.dur, 1e-9) for f in flows}
+    # flows are tracked by sorted position, not id(): indices are stable
+    # across runs, so the fluid model is replayable bit-for-bit
+    remaining = [max(f.comm_bytes, 1e-9) for f in flows]
+    rate1 = [max(f.comm_bytes, 1e-9) / max(f.dur, 1e-9) for f in flows]
     finished: dict[int, float] = {}
     t = flows[0].start
-    active: list[Interval] = []
-    pending = list(flows)
+    active: list[int] = []
+    pending = list(range(len(flows)))
     while pending or active:
-        while pending and pending[0].start <= t + 1e-12:
+        while pending and flows[pending[0]].start <= t + 1e-12:
             active.append(pending.pop(0))
         if not active:
-            t = pending[0].start
+            t = flows[pending[0]].start
             continue
         n = len(active)
         # next event: a flow finishing or a new arrival
-        t_finish = min(t + remaining[id(f)] / (rate1[id(f)] / n) for f in active)
-        t_next = min(t_finish, pending[0].start) if pending else t_finish
+        t_finish = min(t + remaining[i] / (rate1[i] / n) for i in active)
+        t_next = min(t_finish, flows[pending[0]].start) if pending \
+            else t_finish
         dt = t_next - t
         if dt <= 0.0:
             # numerical stall: remaining/rate underflowed against t, so no
             # event advances the clock — finish the flow closest to done to
             # guarantee forward progress
-            f = min(active, key=lambda f: remaining[id(f)] / rate1[id(f)])
-            finished[id(f)] = t
-            active.remove(f)
+            i = min(active, key=lambda i: remaining[i] / rate1[i])
+            finished[i] = t
+            active.remove(i)
             continue
-        for f in list(active):
-            remaining[id(f)] -= rate1[id(f)] / n * dt
-            if remaining[id(f)] <= 1e-9:
-                finished[id(f)] = t_next
-                active.remove(f)
+        for i in list(active):
+            remaining[i] -= rate1[i] / n * dt
+            if remaining[i] <= 1e-9:
+                finished[i] = t_next
+                active.remove(i)
         t = t_next
     out = []
-    for f in flows:
+    for i, f in enumerate(flows):
         nf = Interval(f.name, f.kind, f.stream, f.start,
-                      finished.get(id(f), f.end), f.phase, f.comm_group,
+                      finished.get(i, f.end), f.phase, f.comm_group,
                       f.comm_bytes, f.repeat, f.engine)
         out.append(nf)
     return out

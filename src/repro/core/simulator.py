@@ -121,11 +121,24 @@ class Simulator:
     def __init__(self, hw: str | HardwareSpec = "tpu_v5e",
                  engine: str = "analytical", db: ProfileDB | None = None,
                  *, overlap: str = "ratio", measure_on_miss: bool = False,
-                 cache: bool = True, persist: str | None = None):
+                 cache: bool = True, persist: str | None = None,
+                 sanitize: bool | None = None):
         self.hw = HARDWARE[hw] if isinstance(hw, str) else hw
         self.db = db or ProfileDB()
         self.overlap = overlap
-        self.cache = SimCache(enabled=cache)
+        # sanitize=None defers to the CHARON_SANITIZE env knob; when on,
+        # the cache fingerprints values at insert and re-verifies at hit
+        # (cache-poisoning detector — see repro.analysis.sanitize).  The
+        # default path constructs a plain SimCache with no fingerprinting
+        # code anywhere near the hot get().
+        if sanitize is None:
+            sanitize = os.environ.get("CHARON_SANITIZE", "") not in ("", "0")
+        self.sanitize = bool(sanitize)
+        if self.sanitize:
+            from repro.analysis.sanitize import SanitizingSimCache
+            self.cache = SanitizingSimCache(enabled=cache)
+        else:
+            self.cache = SimCache(enabled=cache)
         engines = []
         if engine in ("fused", "profiling"):
             engines.append(ProfilingEngine(self.hw, self.db,
@@ -310,7 +323,7 @@ class Simulator:
 
     # ------------------------------------------------------------------
     def run(self, spec, *, keep_timelines: bool = False,
-            recorder=None) -> Report:
+            recorder=None, metrics=None) -> Report:
         """Simulate one :class:`repro.api.spec.SimSpec` — the primary entry
         point.  The spec's cluster must name this simulator's hardware;
         serving workloads belong to ``ServingSimulator.run``.
@@ -319,7 +332,10 @@ class Simulator:
         priced block timelines and pipeline schedule as trace lanes; it
         forces ``keep_timelines=True`` internally (there is nothing to
         record without them) but the returned report is numerically
-        identical to the fast path either way."""
+        identical to the fast path either way.  ``metrics`` (a
+        :class:`~repro.obs.MetricsRegistry`) adopts this simulator's cache
+        and extrapolation counters after the run; both default to off and
+        cost one ``is None`` check on the fast path."""
         if spec.cluster.hardware != self.hw.name:
             raise ValueError(
                 f"simulator built for {self.hw.name!r} cannot run a spec for "
@@ -333,19 +349,24 @@ class Simulator:
             rep = self._simulate(spec.model, par=spec.parallel,
                                  keep_timelines=True, **w.sim_kwargs())
             record_report(recorder, rep)
-            return rep
-        if keep_timelines or not self.cache.persistent:
-            return self._simulate(spec.model, par=spec.parallel,
-                                  keep_timelines=keep_timelines,
-                                  **w.sim_kwargs())
-        # cross-run memo (persistent tier attached): the stable spec JSON
-        # hash is the on-disk key, the engine state version rides along so a
-        # profile-DB put / prediction retrain can never serve a stale Report
-        key = (spec.json_hash(), self.engine._state_version())
-        return self.cache.get(
-            "reports", key,
-            lambda: self._simulate(spec.model, par=spec.parallel,
-                                   **w.sim_kwargs()))
+        elif keep_timelines or not self.cache.persistent:
+            rep = self._simulate(spec.model, par=spec.parallel,
+                                 keep_timelines=keep_timelines,
+                                 **w.sim_kwargs())
+        else:
+            # cross-run memo (persistent tier attached): the stable spec
+            # JSON hash is the on-disk key, the engine state version rides
+            # along so a profile-DB put / prediction retrain can never
+            # serve a stale Report
+            key = (spec.json_hash(), self.engine._state_version())
+            rep = self.cache.get(
+                "reports", key,
+                lambda: self._simulate(spec.model, par=spec.parallel,
+                                       **w.sim_kwargs()))
+        if metrics is not None:
+            metrics.inc("sim.runs")
+            metrics.update_from_simulator(self)
+        return rep
 
     def simulate(self, cfg: ModelConfig, *, mode: str = "train",
                  global_batch: int = 8, seq_len: int = 2048,

@@ -57,6 +57,10 @@ class StepOracle:
         self._price: dict[tuple, float] = {}
         self._raw: dict[tuple, float] = {}
         self._memo_ver = None       # engine state version the memos are for
+        # sanitize mode (CHARON_SANITIZE / Simulator(sanitize=True)):
+        # every memo fast-path hit is re-verified against the authoritative
+        # serving-bucket price; off path is this one attribute check
+        self._sanitize = bool(getattr(self.sim, "sanitize", False))
 
     @classmethod
     def from_spec(cls, sim: Simulator, spec) -> "StepOracle":
@@ -108,6 +112,8 @@ class StepOracle:
             price = self._price.get(fast)
             if price is not None:
                 self.sim.cache.stats["serving"].hits += 1  # semantically a hit
+                if self._sanitize:
+                    self._verify_memo("_price", fast, price, ver)
                 return price
         spec = self._spec_for(mode, B, S, cache_len)
         # the bucketed spec IS the cache key; the engine state version rides
@@ -132,6 +138,34 @@ class StepOracle:
             self.sim.cache.stats["serving"].hits += 1   # semantically a hit
         return price
 
+    def _verify_memo(self, memo: str, key: tuple, price: float,
+                     ver=None) -> None:
+        """Sanitize-mode cross-check: recompute *key*'s price through the
+        authoritative serving-bucket path and require an exact match with
+        the memoized value (a mismatch means a memo survived state it
+        should not have — the PR 6 oracle-leak class, at runtime)."""
+        if memo == "_raw":
+            mode, n, length = key
+            B = pow2_bucket(n)
+            if mode == "decode":
+                C = pow2_bucket(length, self.ctx_floor)
+                fresh = self._priced_s("decode", B, C, C)
+            else:
+                S = pow2_bucket(length, self.seq_floor)
+                fresh = self._priced_s("prefill", B, S, 0)
+        else:
+            mode, B, S, cache_len = key
+            if ver is None:
+                ver = self.sim.engine._state_version()
+            spec = self._spec_for(mode, B, S, cache_len)
+            rep = self.sim.cache.get("serving", (spec, ver),
+                                     lambda: self.sim.run(spec))
+            fresh = rep.step_time_us / 1e6
+        if fresh != price:
+            from repro.analysis.sanitize import CacheSanitizerError
+            raise CacheSanitizerError(f"oracle.{memo}", key,
+                                      repr(price), repr(fresh))
+
     def decode_step_s(self, batch: int, ctx: int) -> float:
         """One decode iteration: ``batch`` sequences, deepest context ``ctx``."""
         key = ("decode", batch, ctx)
@@ -142,6 +176,8 @@ class StepOracle:
             price = self._priced_s("decode", B, C, C)
             if self.sim.cache.enabled:
                 self._raw[key] = price
+        elif self._sanitize:
+            self._verify_memo("_raw", key, price)
         return price
 
     def prefill_s(self, batch: int, seq: int) -> float:
@@ -154,6 +190,8 @@ class StepOracle:
             price = self._priced_s("prefill", B, S, 0)
             if self.sim.cache.enabled:
                 self._raw[key] = price
+        elif self._sanitize:
+            self._verify_memo("_raw", key, price)
         return price
 
     def mixed_step_s(self, n_decode: int, ctx: int, chunk_tokens: int) -> float:

@@ -72,7 +72,9 @@ class ServingReport:
     steps_by_kind: dict                 # step kind -> count
     utilization: dict                   # pool -> {busy_frac, <kind>_frac, steps}
     oracle_stats: dict = field(default_factory=dict)  # serving-bucket delta
-    requests: list = field(default_factory=list)      # finished SimRequests
+    # finished SimRequests; a tuple because report objects are cache-shared
+    # (charon-lint R1: cached values must be immutable or copied)
+    requests: tuple = field(default_factory=tuple)
 
     @staticmethod
     def build(reqs, pools, slo: SLO | None,
@@ -108,7 +110,7 @@ class ServingReport:
             goodput_rps=attain * rps,
             n_steps=sum(p.n_steps for p in pools),
             steps_by_kind=steps_by_kind, utilization=util,
-            oracle_stats=oracle_stats, requests=list(reqs))
+            oracle_stats=oracle_stats, requests=tuple(reqs))
 
     # per-replica serving results are replica-level; FleetReport overrides
     system_level: ClassVar[bool] = False
@@ -178,15 +180,15 @@ class FleetReport:
     steps_by_kind: dict
     router: str
     n_replicas: int                      # replicas constructed (incl. standby)
-    replicas: list = field(default_factory=list)   # per-replica ServingReports
+    replicas: tuple = field(default_factory=tuple)  # per-replica ServingReports
     replica_requests: dict = field(default_factory=dict)  # r<idx> -> n finished
     replica_utilization: dict = field(default_factory=dict)  # r<idx>/<pool>
-    autoscaler_trace: list = field(default_factory=list)
+    autoscaler_trace: tuple = field(default_factory=tuple)
     oracle_stats: dict = field(default_factory=dict)
-    requests: list = field(default_factory=list)
+    requests: tuple = field(default_factory=tuple)
     # replica fault injection (FleetSpec.faults): the seeded failure trace,
     # and how many queued/in-flight requests were displaced and rerouted
-    failure_trace: list = field(default_factory=list)  # {t, replica} rows
+    failure_trace: tuple = field(default_factory=tuple)  # {t, replica} rows
     n_rerouted: int = 0
 
     system_level: ClassVar[bool] = True
@@ -224,8 +226,8 @@ class FleetReport:
         pool names, own makespan — which is what makes the round-robin
         fleet bit-identical to per-shard single runs.
         """
-        per = [ServingReport.build(reqs, rep.pools, slo, {})
-               for rep, reqs in zip(replicas, finished_by)]
+        per = tuple(ServingReport.build(reqs, rep.pools, slo, {})
+                    for rep, reqs in zip(replicas, finished_by))
         reqs = [r for chunk in finished_by for r in chunk]
         t0 = min((r.arrival_s for r in reqs), default=0.0)
         t1 = max((r.finished_s for r in reqs), default=0.0)
@@ -263,9 +265,9 @@ class FleetReport:
             replica_requests={f"r{rep.index}": len(chunk)
                               for rep, chunk in zip(replicas, finished_by)},
             replica_utilization=util,
-            autoscaler_trace=list(autoscaler_trace),
-            oracle_stats=oracle_stats, requests=reqs,
-            failure_trace=list(failure_trace or []), n_rerouted=n_rerouted)
+            autoscaler_trace=tuple(autoscaler_trace),
+            oracle_stats=oracle_stats, requests=tuple(reqs),
+            failure_trace=tuple(failure_trace or ()), n_rerouted=n_rerouted)
 
     def summary(self) -> dict:
         """Flat dict for benchmarks / examples."""

@@ -266,3 +266,162 @@ def test_serving_spec_run_matches_legacy_construction():
     a, b = via_spec.summary(), legacy.summary()
     a.pop("oracle_stats"), b.pop("oracle_stats")  # hit/miss split differs
     assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Frozen-spec JSON round-trip property test — the runtime twin of charon-lint
+# rule R3 (spec-surface drift): every frozen spec dataclass, discovered
+# automatically, must survive to_json/from_dict round-trips with equality,
+# json_hash() and hash() intact.  The "maximal" specs below set every public
+# field of every spec class to a non-default value, so a field silently
+# dropped by from_dict (or excluded from __eq__) fails here even before the
+# linter sees the source.
+# ---------------------------------------------------------------------------
+
+def _discovered_spec_classes():
+    import inspect
+
+    import repro.api.spec as spec_mod
+    out = {}
+    for name, obj in vars(spec_mod).items():
+        if (inspect.isclass(obj) and dataclasses.is_dataclass(obj)
+                and obj.__module__ == spec_mod.__name__
+                and obj.__dataclass_params__.frozen
+                and not name.startswith("_")):
+            out[name] = obj
+    return out
+
+
+def _maximal_specs():
+    from repro.api.spec import (
+        AutoscalerSpec, CheckpointSpec, Cluster, DecodeWorkload, FaultModel,
+        FleetSpec, PrefillWorkload, ReplicaFaultSpec, ResilienceSpec,
+        RouterSpec, ServingWorkload, TrainWorkload,
+    )
+    from repro.serving.sim.report import SLO
+    from repro.serving.sim.workload import LengthDist
+
+    cluster = Cluster(hardware="tpu_v5p", chips=16, pods=2,
+                      memory_limit=123e9)
+    par = ParallelConfig(tp=2, dp=2, pods=2)
+    train = SimSpec(CFG, cluster=cluster, parallel=par,
+                    workload=TrainWorkload(
+                        global_batch=16, seq_len=256, cache_len=128,
+                        fusion=True, quantize="int8", remat="dots",
+                        optimizer="adafactor",
+                        resilience=ResilienceSpec(
+                            total_steps=777,
+                            faults=FaultModel(chip_mtbf_s=9e6,
+                                              host_mtbf_s=4e5,
+                                              link_mtbf_s=8e6,
+                                              dist="weibull",
+                                              weibull_shape=0.9, seed=3),
+                            ckpt=CheckpointSpec(interval_steps=50,
+                                                mode="async",
+                                                write_gbps=1.5,
+                                                restore_factor=1.2,
+                                                async_overhead=0.1),
+                            chips_per_host=4, spares=2, elastic=False,
+                            restart_delay_s=33.0, repair_s=444.0,
+                            straggler_prob=0.1, straggler_mult=1.5,
+                            optimize_interval=False, max_wall_factor=99.0)))
+    prefill = SimSpec(CFG, workload=PrefillWorkload(
+        global_batch=4, seq_len=512, cache_len=64, fusion=True,
+        quantize="f8"))
+    decode = SimSpec(CFG, workload=DecodeWorkload(
+        global_batch=4, seq_len=1, cache_len=1024, fusion=True,
+        quantize="int8"))
+    serving = SimSpec(CFG, workload=ServingWorkload(
+        n_requests=33, arrival="bursty", rate_rps=5.5, burst_factor=2.0,
+        switch_prob=0.2, period_s=100.0, diurnal_amp=0.5,
+        flash_start_s=10.0, flash_dur_s=5.0, flash_mult=3.0, sessions=4,
+        prompt=LengthDist("uniform", lo=2, hi=64),
+        output=LengthDist("fixed", value=7),
+        seed=9, trace=((0.5, 7, 3), (1.0, 2, 1)),
+        slo=SLO(ttft_s=1.5, tpot_ms=80.0),
+        policy="chunked", max_batch=16, token_budget=128, ctx_floor=128,
+        fleet=FleetSpec(
+            replicas=3,
+            router=RouterSpec("least_loaded", fallback="round_robin"),
+            autoscaler=AutoscalerSpec(min_replicas=2, max_replicas=5,
+                                      scale_up_queue=9.0,
+                                      scale_down_queue=2.0, interval_s=3.0,
+                                      cooldown_s=5.0, provision_s=6.0),
+            prefill_replicas=1, prefill_batch=2, transfer_s=0.005,
+            faults=ReplicaFaultSpec(mtbf_s=500.0, restart_s=20.0,
+                                    dist="weibull", weibull_shape=0.8,
+                                    seed=5))))
+    return [train, prefill, decode, serving]
+
+
+def _walk_dataclasses(obj, acc):
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        acc.append(obj)
+        for f in dataclasses.fields(obj):
+            _walk_dataclasses(getattr(obj, f.name), acc)
+    elif isinstance(obj, (list, tuple)):
+        for v in obj:
+            _walk_dataclasses(v, acc)
+    elif isinstance(obj, dict):
+        for v in obj.values():
+            _walk_dataclasses(v, acc)
+
+
+def test_every_frozen_spec_class_appears_in_maximal_specs():
+    """A new frozen spec class added to repro.api.spec without a home in
+    the maximal specs above fails here — forcing the round-trip test (and
+    from_dict) to learn about it."""
+    discovered = _discovered_spec_classes()
+    instances = []
+    for spec in _maximal_specs():
+        _walk_dataclasses(spec, instances)
+    covered = {type(i).__name__ for i in instances}
+    missing = set(discovered) - covered
+    assert not missing, (
+        f"frozen spec classes with no instance in the maximal specs: "
+        f"{sorted(missing)} — add one so the JSON round-trip covers them")
+
+
+def test_every_spec_field_is_non_default_somewhere():
+    """Every public init field of every frozen spec class must differ from
+    its default in at least one maximal-spec instance; a field stuck at its
+    default would round-trip trivially and hide a from_dict omission."""
+    discovered = _discovered_spec_classes()
+    instances = []
+    for spec in _maximal_specs():
+        _walk_dataclasses(spec, instances)
+    by_type = {}
+    for i in instances:
+        by_type.setdefault(type(i).__name__, []).append(i)
+    stuck = []
+    for name, cls in discovered.items():
+        for f in dataclasses.fields(cls):
+            if not f.init or f.name.startswith("_"):
+                continue
+            if f.default is dataclasses.MISSING \
+                    and f.default_factory is dataclasses.MISSING:
+                continue                      # required: always "set"
+            default = (f.default if f.default is not dataclasses.MISSING
+                       else f.default_factory())
+            if not any(getattr(i, f.name) != default
+                       for i in by_type.get(name, [])):
+                stuck.append(f"{name}.{f.name}")
+    assert not stuck, (
+        f"spec fields never set to a non-default value in the maximal "
+        f"specs: {stuck}")
+
+
+def test_frozen_spec_json_roundtrip_preserves_equality_and_hash():
+    for spec in _maximal_specs():
+        rt = SimSpec.from_json(spec.to_json())
+        assert rt == spec, f"JSON round-trip changed the spec: {spec}"
+        assert rt.json_hash() == spec.json_hash()
+        assert hash(rt) == hash(spec)
+        assert SimSpec.from_dict(spec.asdict()) == spec
+        # pickling must round-trip too, *without* the process-salted hash
+        # memo (the PR 5 __getstate__ class)
+        import pickle
+        hash(spec)                       # force the memo before pickling
+        assert "_hash" not in spec.__getstate__()
+        pk = pickle.loads(pickle.dumps(spec))
+        assert pk == spec and hash(pk) == hash(spec)

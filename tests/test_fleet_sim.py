@@ -222,7 +222,7 @@ def test_autoscaler_no_thrash_on_flat_trace(sim):
     spec = _spec(n=150, arrival="uniform", rate=8.0, fleet=fleet)
     rep = ServingSimulator(sim).run(spec)
     assert rep.n_requests == 150
-    assert rep.autoscaler_trace == []
+    assert rep.autoscaler_trace == ()   # frozen: cache-shared reports are immutable
 
 
 def test_autoscaler_scales_up_on_flash_crowd(sim):

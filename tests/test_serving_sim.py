@@ -75,6 +75,42 @@ def test_thin_is_deprecated_shard():
                 for r in wl.shard(2).requests])
 
 
+def test_thin_external_call_warns_and_matches_shard():
+    """The deprecation contract as an *external* caller sees it: pytest.ini
+    escalates CharonDeprecationWarning to an error for intra-repo callers,
+    but external users run with default filters — thin() must emit exactly
+    one warning there, keep working, and stay bit-identical to shard()
+    (both offsets, all request fields, reset decode state)."""
+    import warnings
+
+    from repro.api.spec import CharonDeprecationWarning
+    wl = synthesize(40, arrival="bursty", rate_rps=25.0, seed=7)
+    for offset in (0, 1):
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("default")   # external-style filters
+            thinned = wl.thin(3, offset)
+        ours = [w for w in caught
+                if issubclass(w.category, CharonDeprecationWarning)]
+        assert len(ours) == 1
+        assert "FleetSpec(replicas=k)" in str(ours[0].message)
+        sharded = wl.shard(3, offset)
+        assert ([(r.rid, r.arrival_s, r.prompt_len, r.output_len, r.decoded)
+                 for r in thinned.requests]
+                == [(r.rid, r.arrival_s, r.prompt_len, r.output_len,
+                     r.decoded) for r in sharded.requests])
+    # shim results are reset clones, never aliases of the source workload
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        t = wl.thin(2)
+    t.requests[0].decoded = 123
+    assert wl.requests[0].decoded == 0
+    # and the escalation path external CI setups opt into still raises
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", CharonDeprecationWarning)
+        with pytest.raises(CharonDeprecationWarning):
+            wl.thin(2)
+
+
 def test_pow2_bucket():
     assert [pow2_bucket(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
     assert pow2_bucket(3, floor=64) == 64
