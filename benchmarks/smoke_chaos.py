@@ -1,0 +1,106 @@
+"""Chaos smoke: a pooled sweep under an injected fault schedule must be
+bit-identical to the fault-free serial sweep.
+
+CI runs this with ``CHARON_FAULTS`` set (crash + hang + poison-candidate +
+shard-corruption rates); locally it falls back to a built-in schedule.
+Deliberately standalone — it must NOT go through ``benchmarks/run.py``
+(which rewrites BENCH_sim.json and would skew the committed throughput
+baselines the regression guards compare against).
+
+Checks, in order:
+
+* the fault plan parsed from the env actually *fires* (nonzero injected
+  fault counters — a schedule that never fires verifies nothing);
+* rankings, reports and pruned reasons of the chaotic pooled sweep equal
+  the fault-free serial sweep's exactly (or, if retries were exhausted,
+  every quarantined candidate is reported with its reason and the
+  surviving rows still match serial);
+* corrupted cache shards were quarantined, never merged.
+
+Exits non-zero on any divergence.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+# a schedule verified to fire on this space (seed-scanned; see
+# tests/test_pool_robustness.py for the methodology)
+DEFAULT_FAULTS = ("worker_crash:0.3,worker_hang:0.15,candidate_error:0.2,"
+                  "cache_corrupt:1.0,seed:3,hang_s:60")
+os.environ.setdefault("CHARON_FAULTS", DEFAULT_FAULTS)
+
+from repro.analysis.chaos import FaultPlan
+from repro.api import Cluster, DecodeWorkload, SimSpec, SweepSpace, sweep
+from repro.api.pool import RetryPolicy, shutdown_pools
+from repro.configs import get_config
+
+
+def _space():
+    base = SimSpec(get_config("xlstm-125m"),
+                   cluster=Cluster("tpu_v5e", chips=16, memory_limit=16e9),
+                   workload=DecodeWorkload(global_batch=8, seq_len=1024))
+    return SweepSpace(base, {"tp": (1, 2, 4), "pp": (1, 2),
+                             "batch": (8, 16, 32)})
+
+
+def _key(res):
+    return ([(r.cand.key(), r.report.step_time_us,
+              sorted(r.report.kind_us.items())) for r in res.evaluated],
+            [(r.cand.key(), r.reason) for r in res.pruned],
+            [(r.cand.key(), r.report.step_time_us) for r in res.ranked()])
+
+
+def main() -> int:
+    plan = FaultPlan.from_env()
+    assert plan is not None and plan.enabled, "CHARON_FAULTS not set"
+    print(f"chaos schedule: {plan}")
+
+    serial = sweep(_space(), faults=FaultPlan())        # fault-free baseline
+    with tempfile.TemporaryDirectory() as tmp:
+        chaotic = sweep(
+            _space(), workers=2, persist=tmp, faults=plan,
+            retry=RetryPolicy(timeout_s=3.0, backoff_s=0.01,
+                              backoff_max_s=0.1))
+        corrupt = [f for f in os.listdir(tmp) if f.endswith(".corrupt")]
+        leftover = [f for f in os.listdir(tmp) if f.endswith(".shard")]
+    c = chaotic.metrics.get("counters", {})
+    injected = {k: int(c.get(f"pool.{k}", 0))
+                for k in ("worker_deaths", "timeouts", "candidate_errors",
+                          "retries", "respawns", "cache_shards_quarantined")}
+    print(f"injected/recovered: {injected}")
+    assert sum(injected.values()) > 0, \
+        "fault schedule never fired — the smoke verified nothing"
+    if plan.cache_corrupt > 0:
+        assert injected["cache_shards_quarantined"] >= 1 and corrupt, \
+            "corrupt shards were not quarantined"
+    assert not leftover, f"unmerged shards left behind: {leftover}"
+
+    if chaotic.failed:
+        # retries exhausted (a repeat:1 schedule): quarantine must be clean
+        print(f"quarantined {len(chaotic.failed)} candidate(s):")
+        for f in chaotic.failed:
+            print(f"  {f.spec.json_hash()[:12]} after {f.attempts} "
+                  f"attempt(s): {f.reason}")
+        survived = {r.spec.json_hash() for r in chaotic.evaluated}
+        s_key = _key(serial)
+        ch = _key(chaotic)
+        assert [x for x in s_key[0]
+                if x[0] in {r.cand.key() for r in chaotic.evaluated}] \
+            and all(row in s_key[0] for row in ch[0]), \
+            "surviving rows diverged from serial"
+        assert survived, "every candidate quarantined — schedule too hot"
+    else:
+        assert _key(chaotic) == _key(serial), \
+            "chaotic pooled sweep diverged from fault-free serial"
+        print(f"bit-identical to serial: {len(chaotic.evaluated)} evaluated,"
+              f" {len(chaotic.pruned)} pruned, 0 quarantined")
+
+    shutdown_pools()
+    print("chaos smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,7 +16,7 @@ from .rules import ALL_RULES, RULES_BY_ID
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
-        description="charon-lint: enforce Charon repro invariants R1-R5")
+        description="charon-lint: enforce Charon repro invariants R1-R6")
     ap.add_argument("paths", nargs="+",
                     help="files or directories to scan (e.g. src/)")
     ap.add_argument("--rules", default=None,

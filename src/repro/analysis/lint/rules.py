@@ -1,4 +1,4 @@
-"""charon-lint rules R1-R5.
+"""charon-lint rules R1-R6.
 
 Each rule encodes one invariant this repo keeps re-fixing by hand (see
 docs/static-analysis.md for the catalog with the real past bug behind each
@@ -668,7 +668,74 @@ class RecorderThreadingRule(Rule):
                         "the inner loop are silently dropped")
 
 
+# ---------------------------------------------------------------- R6
+
+# exceptions that carry control flow (shutdown, Ctrl-C, generator close):
+# swallowing one inside retry/cleanup logic turns "user pressed Ctrl-C"
+# into "retry the candidate", making a sweep unkillable
+_CONTROL_EXCS = {"BaseException", "KeyboardInterrupt", "SystemExit",
+                 "GeneratorExit"}
+
+
+def _caught_names(node: ast.expr | None) -> set:
+    """Exception names named by an ``except`` clause (tuples flattened;
+    ``mp.ProcessError``-style attributes reduce to their tail name)."""
+    if node is None:
+        return set()
+    if isinstance(node, ast.Tuple):
+        out: set = set()
+        for e in node.elts:
+            out |= _caught_names(e)
+        return out
+    if isinstance(node, ast.Name):
+        return {node.id}
+    if isinstance(node, ast.Attribute):
+        return {node.attr}
+    return set()
+
+
+class ExceptionHygieneRule(Rule):
+    """R6: the crash-recovery scopes (worker pool, sweep retry loop, chaos
+    harness, atomic cache writes) must not swallow control-flow exceptions.
+    A bare ``except:`` — or a handler naming BaseException / KeyboardInterrupt
+    / SystemExit / GeneratorExit without a bare ``raise`` in its body — eats
+    Ctrl-C and pool shutdown, leaving orphaned workers and half-written
+    cache files.  Retry logic catches ``Exception``; anything wider must
+    clean up and re-raise (see ``WorkerPool.run`` and ``atomic_pickle`` for
+    the compliant shape)."""
+    id = "R6"
+    title = "exception-hygiene"
+    fixit = ("catch Exception for retryable candidate errors; if a wider "
+             "handler is needed for cleanup, end it with a bare `raise` so "
+             "KeyboardInterrupt/SystemExit still propagate")
+    scopes = ("api/pool.py", "api/sweep.py", "analysis/chaos.py",
+              "core/simcache.py")
+
+    def check(self, mod: ParsedModule):
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield self.finding(
+                    mod, node,
+                    "bare `except:` in a crash-recovery scope catches "
+                    "KeyboardInterrupt/SystemExit; retries would swallow "
+                    "Ctrl-C and make the sweep unkillable")
+                continue
+            control = _caught_names(node.type) & _CONTROL_EXCS
+            if not control:
+                continue
+            reraises = any(isinstance(n, ast.Raise) and n.exc is None
+                           for n in ast.walk(node))
+            if not reraises:
+                yield self.finding(
+                    mod, node,
+                    f"handler catches {'/'.join(sorted(control))} without a "
+                    "bare `raise`; control-flow exceptions must propagate "
+                    "after cleanup or workers/cache writes leak")
+
+
 ALL_RULES = (CacheAliasRule, NondeterminismRule, SpecDriftRule,
-             MemoGuardRule, RecorderThreadingRule)
+             MemoGuardRule, RecorderThreadingRule, ExceptionHygieneRule)
 
 RULES_BY_ID = {r.id: r for r in ALL_RULES}

@@ -27,17 +27,23 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import os
+import traceback
 from dataclasses import dataclass
 from typing import Callable, Iterable
 
+from repro.analysis.chaos import FaultPlan
+from repro.api.pool import (
+    RetryPolicy, SweepJournal, _compact_tb, get_pool,
+)
 from repro.api.spec import ServingWorkload, SimSpec
 from repro.core.backend.collectives import collective_memo_stats
 from repro.obs.clock import wall_s
 from repro.core.explorer import (
-    Candidate, DEFAULT_RULES, EvalResult, ExplorationResult, _stats_delta,
-    rule_memory_fit,
+    Candidate, DEFAULT_RULES, EvalResult, ExplorationResult,
+    FailedCandidate, _stats_delta, rule_memory_fit,
 )
-from repro.core.simulator import Simulator
+from repro.core.simulator import Simulator, merge_cache_shards
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.recorder import NULL_RECORDER
 
@@ -204,97 +210,93 @@ def _serving_probe(spec: SimSpec) -> SimSpec:
                                 seq_len=ctx, cache_len=ctx))
 
 
+def _resolve_scenario(objective: str, scenario):
+    """Normalize the user-facing ``scenario=`` argument once per process
+    (idempotent: an already-resolved scenario passes through).  Deferred
+    import: repro.serving pulls the real-model serving stack, which the
+    step-time-only path never needs."""
+    if objective != "goodput":
+        return scenario
+    from repro.serving.sim import ServingScenario
+    if scenario is None:
+        return ServingScenario.default()
+    if isinstance(scenario, ServingWorkload):
+        return scenario.scenario()
+    return scenario
+
+
+def _evaluate_one(idx: int, spec: SimSpec, cand: Candidate, sims: dict,
+                  stats0: dict, engine: str, objective: str, scenario,
+                  persist: str | None = None, timings: list | None = None,
+                  faults=None, attempt: int = 1) -> EvalResult:
+    """Evaluate one candidate end to end: step/probe pricing, the
+    post-simulation memory filter, then the objective's serving/resilience
+    replay.  THE single evaluation code path — the serial loop and every
+    pool worker run exactly this function, which is why parallel sweeps
+    (under any fault schedule) are bit-identical to serial ones.
+
+    ``timings`` (a list, when given) collects ``(idx, phase, t0, t1)``
+    wall-clock rows per evaluation stage — raw material for the sweep's
+    per-worker trace lanes.  ``faults`` is the chaos hook
+    (:class:`~repro.analysis.chaos.FaultPlan`): only ``candidate_error``
+    fires here, *before* any pricing, so an injected failure can never
+    change a simulated number."""
+    t0 = wall_s()
+    s = _sim_for(spec.cluster, sims, engine, persist)
+    # snapshot a lazily-created simulator's counters before its first
+    # run: the collectives memo is process-global, not zero at birth
+    if spec.cluster.hardware not in stats0:
+        stats0[spec.cluster.hardware] = s.cache_stats()
+    if faults is not None:
+        faults.maybe_raise(spec.json_hash(), attempt)
+    serving_mode = spec.workload.mode == "serving"
+    rep = s.run(_serving_probe(spec) if serving_mode else spec)
+    res = EvalResult(cand, rep, spec=spec)
+    limit = spec.cluster.memory_limit
+    if limit and rep.memory and rep.memory.total > limit:
+        res.pruned = True
+        res.reason = f"memory {rep.memory.total/1e9:.1f}GB > limit"
+    if timings is not None:
+        timings.append((idx, "probe" if serving_mode else "step",
+                        t0, wall_s()))
+    if res.pruned:
+        return res
+    if objective == "goodput":
+        from repro.serving.sim import ServingSimulator
+        t0 = wall_s()
+        if serving_mode:
+            # the spec IS the scenario: trace, SLO, policy and fleet all
+            # come from the ServingWorkload (FleetReports are system-
+            # level — EvalResult.goodput_rps passes them through)
+            res.serving = ServingSimulator(s).run(spec)
+        else:
+            res.serving = scenario.evaluate(s, spec.model, cand)
+        if timings is not None:
+            timings.append((idx, "serving", t0, wall_s()))
+    elif objective == "goodput_under_failures":
+        from repro.resilience import ResilienceSimulator
+        t0 = wall_s()
+        res.resilience = ResilienceSimulator(s).run(spec)
+        if timings is not None:
+            timings.append((idx, "resilience", t0, wall_s()))
+    return res
+
+
 def _evaluate(items: list, sims: dict, stats0: dict, engine: str,
               objective: str, scenario, persist: str | None = None,
               timings: list | None = None,
               progress: Callable | None = None) -> list:
-    """Evaluate ``(idx, spec, cand)`` triples in order; returns
-    ``(idx, EvalResult)`` pairs.  The single evaluation code path shared by
-    the serial sweep and every worker shard — parallel sweeps are
-    bit-identical to serial ones because both run exactly this function.
-
-    ``timings`` (a list, when given) collects ``(idx, phase, t0, t1)``
-    wall-clock rows per evaluation stage — the raw material for the sweep's
-    per-worker trace lanes; ``progress`` is called with each
-    :class:`EvalResult` as its step/probe stage completes.  Neither touches
-    the results.
-    """
+    """Evaluate ``(idx, spec, cand)`` triples in order via
+    :func:`_evaluate_one`; returns ``(idx, EvalResult)`` pairs."""
+    scenario = _resolve_scenario(objective, scenario)
     results: list[tuple[int, EvalResult]] = []
     for idx, spec, cand in items:
-        t0 = wall_s()
-        s = _sim_for(spec.cluster, sims, engine, persist)
-        # snapshot a lazily-created simulator's counters before its first
-        # run: the collectives memo is process-global, not zero at birth
-        if spec.cluster.hardware not in stats0:
-            stats0[spec.cluster.hardware] = s.cache_stats()
-        serving_mode = spec.workload.mode == "serving"
-        rep = s.run(_serving_probe(spec) if serving_mode else spec)
-        res = EvalResult(cand, rep, spec=spec)
-        limit = spec.cluster.memory_limit
-        if limit and rep.memory and rep.memory.total > limit:
-            res.pruned = True
-            res.reason = f"memory {rep.memory.total/1e9:.1f}GB > limit"
+        res = _evaluate_one(idx, spec, cand, sims, stats0, engine,
+                            objective, scenario, persist, timings)
         results.append((idx, res))
-        if timings is not None:
-            timings.append((idx, "probe" if serving_mode else "step",
-                            t0, wall_s()))
         if progress is not None:
             progress(res)
-
-    if objective == "goodput":
-        # deferred import: repro.serving pulls the real-model serving stack,
-        # which the step-time-only path never needs
-        from repro.serving.sim import ServingScenario, ServingSimulator
-        if scenario is None:
-            scenario = ServingScenario.default()
-        elif isinstance(scenario, ServingWorkload):
-            scenario = scenario.scenario()
-        for idx, res in results:
-            if res.pruned:
-                continue
-            t0 = wall_s()
-            s = _sim_for(res.spec.cluster, sims, engine, persist)
-            if res.spec.workload.mode == "serving":
-                # the spec IS the scenario: trace, SLO, policy and fleet all
-                # come from the ServingWorkload (FleetReports are system-
-                # level — EvalResult.goodput_rps passes them through)
-                res.serving = ServingSimulator(s).run(res.spec)
-            else:
-                res.serving = scenario.evaluate(s, res.spec.model, res.cand)
-            if timings is not None:
-                timings.append((idx, "serving", t0, wall_s()))
-    elif objective == "goodput_under_failures":
-        from repro.resilience import ResilienceSimulator
-        for idx, res in results:
-            if res.pruned:
-                continue
-            t0 = wall_s()
-            s = _sim_for(res.spec.cluster, sims, engine, persist)
-            res.resilience = ResilienceSimulator(s).run(res.spec)
-            if timings is not None:
-                timings.append((idx, "resilience", t0, wall_s()))
     return results
-
-
-def _sweep_worker(payload: tuple):
-    """Process-pool entry: evaluate one shard with process-local simulators.
-
-    Returns the shard's ``(idx, EvalResult)`` pairs plus its cache-stat and
-    collectives deltas (each worker owns fresh process-global counters under
-    the default spawn context) and its per-candidate wall-clock timings
-    (epoch seconds — the parent normalizes them into trace lanes)."""
-    shard, engine, objective, scenario, persist = payload
-    sims: dict[str, Simulator] = {}
-    stats0: dict[str, dict] = {}
-    coll0 = collective_memo_stats().as_dict()
-    timings: list = []
-    results = _evaluate(shard, sims, stats0, engine, objective, scenario,
-                        persist, timings=timings)
-    deltas = [_stats_delta(s.cache_stats(), stats0.get(k, {}))
-              for k, s in sims.items()]
-    coll1 = collective_memo_stats().as_dict()
-    coll = {k: coll1[k] - coll0[k] for k in ("hits", "misses")}
-    return results, _merge_stats(deltas), coll, timings
 
 
 def _shard_items(items: list, workers: int) -> list[list]:
@@ -355,6 +357,7 @@ def _write_manifest(path: str, space: SweepSpace,
         return {
             "json_hash": h,
             "spec": json.loads(res.spec.to_json()),
+            "status": "pruned" if res.pruned else "completed",
             "pruned": res.pruned,
             "reason": res.reason or None,
             "step_time_us": (round(res.report.step_time_us, 3)
@@ -366,6 +369,20 @@ def _write_manifest(path: str, space: SweepSpace,
                 if res.resilience is not None else None),
             "explain": explain,
             "rank": rank.get(h),
+        }
+
+    def failed_row(rec) -> dict:
+        # quarantined candidates stay visible: downstream tooling must be
+        # able to see *every* enumerated candidate's outcome
+        return {
+            "json_hash": rec.spec.json_hash(),
+            "spec": json.loads(rec.spec.to_json()),
+            "status": "failed",
+            "pruned": False,
+            "reason": rec.reason,
+            "attempts": rec.attempts,
+            "traceback": rec.traceback or None,
+            "rank": None,
         }
 
     try:
@@ -384,10 +401,12 @@ def _write_manifest(path: str, space: SweepSpace,
         "wall_time_s": round(result.wall_time_s, 3),
         "n_evaluated": len(result.evaluated),
         "n_pruned": len(result.pruned),
+        "n_failed": len(result.failed),
         "metrics": result.metrics or None,
         "ranking": ranking,
         "candidates": [row(r, rank)
-                       for r in result.evaluated + result.pruned],
+                       for r in result.evaluated + result.pruned]
+                      + [failed_row(rec) for rec in result.failed],
     }
     with open(path, "w") as f:
         # default=str absorbs non-JSON axis values (HardwareSpec and
@@ -431,11 +450,23 @@ def _record_sweep_lanes(rec, sweep_t0: float, lane: str, timings: list,
                         cat="prune", args={"idx": idx, "reason": res.reason})
 
 
+def _journal_header(space: SweepSpace, objective: str, engine: str) -> dict:
+    """The identity a journal is keyed by: resuming against a journal whose
+    base spec, axes, objective or engine differ must fail loudly rather
+    than silently mix results from two different sweeps."""
+    return {"base_hash": space.base.json_hash(),
+            "axes": {name: list(vals) for name, vals in space.axes},
+            "objective": objective, "engine": engine}
+
+
 def sweep(space: SweepSpace, *, sim: Simulator | None = None,
           engine: str = "analytical", rules: list[Callable] | None = None,
           max_evals: int = 10_000, objective: str = "step_time",
           scenario=None, workers: int = 1, persist: str | None = None,
-          mp_context: str = "spawn", manifest: str | None = None,
+          mp_context: str | None = None, manifest: str | None = None,
+          journal: str | None = None, resume: str | None = None,
+          strict: bool = False, faults: FaultPlan | None = None,
+          retry: RetryPolicy | None = None,
           recorder=None, metrics: MetricsRegistry | None = None,
           progress: bool = False) -> ExplorationResult:
     """Enumerate, prune, simulate and rank every spec in ``space``.
@@ -462,19 +493,45 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
     step-probed once (one bucketed decode iteration) for the memory filter
     and ranking tie-breaks.
 
-    ``workers > 1`` shards candidate groups by reuse/trace key over that
-    many OS processes (``mp_context``, default spawn); results, rankings and
-    pruned reasons are bit-identical to the serial sweep, with the merged
-    ``cache_stats`` summing the per-worker deltas.  ``sim=`` is not used for
-    evaluation in that case (worker processes own their simulators); pass
-    ``persist=`` (a directory) to warm-start every worker from — and let
-    serial sweeps save to — the on-disk cache tier instead.
+    ``workers > 1`` shards candidate groups by reuse/trace key over a
+    long-lived :class:`~repro.api.pool.WorkerPool` (a process-wide
+    singleton: the second sweep reuses warm workers, skipping the spawn +
+    jax-import tax and keeping worker-local simulator caches hot).
+    ``mp_context=None`` picks ``fork`` where the platform offers it, else
+    ``spawn``.  Results, rankings and pruned reasons are bit-identical to
+    the serial sweep, with the merged ``cache_stats`` summing the
+    per-worker deltas.  ``sim=`` is not used for evaluation in that case
+    (worker processes own their simulators); pass ``persist=`` (a
+    directory) to warm-start every worker from the on-disk cache tier —
+    workers write their new entries back as atomic per-worker shards,
+    merged (and corruption-quarantined) into the main cache file when the
+    sweep completes.
+
+    Execution contract (``retry=``, a :class:`~repro.api.pool.RetryPolicy`):
+    each candidate gets a wall-clock timeout and heartbeat-based liveness
+    checks; a worker crash/hang/timeout retries the candidate with
+    exponential backoff on a respawned worker up to ``max_retries`` times,
+    after which the candidate is *quarantined* — recorded on
+    ``ExplorationResult.failed`` (and as ``status: failed`` in the
+    manifest) instead of aborting the sweep.  ``strict=True`` opts back
+    into fail-fast: the serial path re-raises the underlying exception, the
+    pool raises :class:`~repro.api.pool.CandidateFailedError`.  ``faults=``
+    (a :class:`~repro.analysis.chaos.FaultPlan`; default: parsed from the
+    ``CHARON_FAULTS`` env var) deterministically injects worker crashes,
+    hangs, poison candidates and cache-shard corruption to exercise exactly
+    those recovery paths — see docs/robustness.md.
+
+    ``journal=`` (a file path) appends one fsync'd JSONL row per finished
+    candidate as the sweep runs; after a crash or kill, re-running with the
+    same ``journal=`` (or pointing ``resume=`` at the file) validates the
+    sweep identity, injects the recorded results and evaluates only the
+    remainder — merged rankings are bit-identical to an uninterrupted run.
 
     ``manifest=`` (a file path) writes a JSON provenance record after the
     sweep: the space, every candidate's full spec (keyed by its
-    ``json_hash``), pruned reasons, objective values, a compact ``explain``
-    attribution per surviving row, the metrics snapshot and the final
-    ranking.
+    ``json_hash``), per-row ``status`` (completed/pruned/failed), pruned
+    reasons, objective values, a compact ``explain`` attribution per
+    surviving row, the metrics snapshot and the final ranking.
 
     Observability (all off by default, zero cost when off): ``recorder`` (a
     :class:`~repro.obs.TraceRecorder`) captures per-worker lanes of
@@ -508,6 +565,11 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
     rules = list(DEFAULT_RULES if rules is None else rules)
     reg = metrics if metrics is not None else MetricsRegistry()
     rec = recorder if recorder is not None else NULL_RECORDER
+    policy = retry if retry is not None else RetryPolicy()
+    if faults is None:
+        faults = FaultPlan.from_env()
+    if faults is not None and not faults.enabled:
+        faults = None
     t0 = wall_s()
     coll0 = collective_memo_stats().as_dict()
     pruned: list[EvalResult] = []
@@ -544,6 +606,30 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
     items = [(i, spec, cand)
              for i, (spec, cand) in enumerate(cands[:max_evals])]
 
+    # ---- journal / resume: skip candidates with recorded outcomes --------
+    header = _journal_header(space, objective, engine)
+    expect = {"kind": SweepJournal.KIND, "version": SweepJournal.VERSION,
+              **header}
+    prior_rows: dict[str, dict] = {}
+    if resume and not (journal and os.path.abspath(str(resume))
+                       == os.path.abspath(str(journal))):
+        prior_rows.update(SweepJournal.load(str(resume), expect=expect))
+    jr = SweepJournal(str(journal), header) if journal else None
+    if jr is not None:
+        prior_rows.update(jr.rows)
+
+    injected: list[tuple[int, EvalResult]] = []
+    todo: list = []
+    for idx, spec, cand in items:
+        row = prior_rows.get(spec.json_hash()) if prior_rows else None
+        # failed rows are re-attempted: a resume is an explicit second
+        # chance for transient (crash/timeout) failures
+        if row is not None and row["status"] in ("completed", "pruned"):
+            injected.append((idx, SweepJournal.result_from(row)))
+            reg.inc("sweep.resumed")
+        else:
+            todo.append((idx, spec, cand))
+
     def count_result(res: EvalResult) -> None:
         reg.inc("sweep.configs_done")
         if res.pruned:
@@ -552,74 +638,116 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
         else:
             reg.inc("sweep.evaluated")
 
+    for _, res in injected:
+        count_result(res)
+
+    failed: list[FailedCandidate] = []
+
+    def on_result(res: EvalResult, attempt: int = 1) -> None:
+        count_result(res)
+        if jr is not None:
+            jr.append_result(res)
+        if progress:
+            _progress_line(reg, len(items), t0)
+
+    def on_failed(recf: FailedCandidate) -> None:
+        reg.inc("sweep.configs_done")
+        reg.inc("sweep.failed")
+        if jr is not None:
+            jr.append_failed(recf)
+        if rec.enabled:
+            rec.instant("sweep", "quarantine", "quarantine",
+                        wall_s() - t0, cat="fault",
+                        args={"json_hash": recf.spec.json_hash()[:12],
+                              "reason": recf.reason,
+                              "attempts": recf.attempts})
+        if progress:
+            _progress_line(reg, len(items), t0)
+
     workers = max(int(workers), 1)
-    if workers > 1 and len(items) > 1:
-        import concurrent.futures as cf
-        import multiprocessing as mp
-        shards = _shard_items(items, workers)
-        ctx = mp.get_context(mp_context)
-        merged: dict = {}
-        coll = {"hits": 0, "misses": 0}
-        shard_results: list = []
-        with cf.ProcessPoolExecutor(max_workers=len(shards),
-                                    mp_context=ctx) as pool:
-            for k, (results, stats, wcoll, wtimings) in enumerate(pool.map(
-                    _sweep_worker,
-                    [(s, engine, objective, scenario, persist)
-                     for s in shards])):
-                shard_results.extend(results)
-                for _, res in results:
-                    count_result(res)
-                for _, phase, a, b in wtimings:
+    pooled = workers > 1 and len(todo) > 1
+    try:
+        if pooled:
+            shards = _shard_items(todo, workers)
+            pool = get_pool(workers, mp_context)
+            eval_results, pool_failed, merged, coll, lanes, shard_files = \
+                pool.run(shards, engine=engine, objective=objective,
+                         scenario=scenario, persist=persist, faults=faults,
+                         policy=policy, strict=strict,
+                         shard_tag=space.base.json_hash()[:8],
+                         metrics=reg, recorder=rec, sweep_t0=t0,
+                         on_result=on_result, on_failed=on_failed)
+            failed.extend(pool_failed)
+            by_idx = dict(eval_results)
+            for wid in sorted(lanes):
+                for _, phase, a, b in lanes[wid]:
                     reg.observe(f"sweep.eval_s.{phase}", b - a)
-                _record_sweep_lanes(rec, t0, f"worker{k}", wtimings,
-                                    dict(results))
-                for layer, st in stats.items():
-                    acc = merged.setdefault(layer, {"hits": 0, "misses": 0})
-                    acc["hits"] += st["hits"]
-                    acc["misses"] += st["misses"]
-                for k2 in coll:
-                    coll[k2] += wcoll[k2]
-                if progress:
-                    _progress_line(reg, len(items), t0)
-        shard_results.sort(key=lambda r: r[0])   # restore serial order
-        evaluated = []
-        for _, res in shard_results:
-            (pruned if res.pruned else evaluated).append(res)
-        wall = wall_s() - t0
-        merged["collectives"] = coll
-    else:
-        sims: dict[str, Simulator] = {}
-        if sim is not None:
-            sims[sim.hw.name] = sim
-        stats0 = {k: s.cache_stats() for k, s in sims.items()}
-        evaluated = []
-        timings: list = []
+                _record_sweep_lanes(rec, t0, f"worker{wid}", lanes[wid],
+                                    by_idx)
+            # workers wrote their persistent-cache entries as atomic
+            # shards; union them back into the main file(s) now
+            for main, shard_list in sorted(shard_files.items()):
+                merge_cache_shards(main, shard_list, metrics=reg)
+            merged["collectives"] = coll
+        else:
+            sims: dict[str, Simulator] = {}
+            if sim is not None:
+                sims[sim.hw.name] = sim
+            stats0 = {k: s.cache_stats() for k, s in sims.items()}
+            timings: list = []
+            scenario_r = _resolve_scenario(objective, scenario)
+            eval_results = []
+            for idx, spec, cand in todo:
+                attempt = 1
+                while True:
+                    try:
+                        res = _evaluate_one(
+                            idx, spec, cand, sims, stats0, engine,
+                            objective, scenario_r, persist, timings,
+                            faults=faults, attempt=attempt)
+                    except Exception as e:
+                        if strict:
+                            raise
+                        reg.inc("pool.candidate_errors")
+                        if attempt <= policy.max_retries:
+                            attempt += 1
+                            reg.inc("pool.retries")
+                            continue
+                        recf = FailedCandidate(
+                            cand, spec, attempt,
+                            f"{type(e).__name__}: {e}",
+                            _compact_tb(traceback.format_exc()))
+                        reg.inc("pool.quarantined")
+                        failed.append(recf)
+                        on_failed(recf)
+                        break
+                    eval_results.append((idx, res))
+                    on_result(res, attempt)
+                    break
+            for _, phase, a, b in timings:
+                reg.observe(f"sweep.eval_s.{phase}", b - a)
+            _record_sweep_lanes(rec, t0, "worker0", timings,
+                                dict(eval_results))
+            if persist:
+                for s in sims.values():
+                    s.save_cache()
+            deltas = [_stats_delta(s.cache_stats(), stats0.get(k, {}))
+                      for k, s in sims.items()]
+            merged = _merge_stats(deltas)
+            coll1 = collective_memo_stats().as_dict()
+            merged["collectives"] = {k: coll1[k] - coll0[k]
+                                     for k in ("hits", "misses")}
+    finally:
+        if jr is not None:
+            jr.close()
 
-        def on_result(res: EvalResult) -> None:
-            count_result(res)
-            if progress:
-                _progress_line(reg, len(items), t0)
-
-        eval_results = _evaluate(items, sims, stats0, engine, objective,
-                                 scenario, persist, timings=timings,
-                                 progress=on_result)
-        for _, res in eval_results:
-            (pruned if res.pruned else evaluated).append(res)
-        for _, phase, a, b in timings:
-            reg.observe(f"sweep.eval_s.{phase}", b - a)
-        _record_sweep_lanes(rec, t0, "worker0", timings, dict(eval_results))
-        if persist:
-            for s in sims.values():
-                s.save_cache()
-
-        wall = wall_s() - t0
-        deltas = [_stats_delta(s.cache_stats(), stats0.get(k, {}))
-                  for k, s in sims.items()]
-        merged = _merge_stats(deltas)
-        coll1 = collective_memo_stats().as_dict()
-        merged["collectives"] = {k: coll1[k] - coll0[k]
-                                 for k in ("hits", "misses")}
+    wall = wall_s() - t0
+    evaluated = []
+    for _, res in sorted(eval_results + injected, key=lambda r: r[0]):
+        (pruned if res.pruned else evaluated).append(res)
+    # deterministic quarantine order regardless of which worker/attempt
+    # recorded the failure
+    failed.sort(key=lambda f: f.spec.json_hash())
     if progress:
         _progress_line(reg, len(items), t0, final=True)
     reg.set("sweep.n_groups", n_groups)
@@ -631,8 +759,8 @@ def sweep(space: SweepSpace, *, sim: Simulator | None = None,
         tuple(evaluated), tuple(pruned), wall, n_groups=n_groups,
         configs_per_sec=(len(items) / wall) if wall > 0 else 0.0,
         cache_stats=merged, objective=objective,
-        workers=workers if (workers > 1 and len(items) > 1) else 1,
-        metrics=reg.snapshot())
+        workers=workers if pooled else 1,
+        metrics=reg.snapshot(), failed=tuple(failed))
     if manifest:
         _write_manifest(manifest, space, result)
     return result

@@ -48,6 +48,20 @@ class Candidate:
         return (self.par.shard_key(), self.B_local())
 
 
+@dataclass(frozen=True)
+class FailedCandidate:
+    """A quarantined candidate: it exhausted its execution contract
+    (``max_retries`` worker deaths/timeouts, or raised inside evaluation)
+    and was recorded instead of aborting the sweep.  A third outcome
+    category next to evaluated/pruned — downstream tooling must never
+    silently drop candidates (manifest rows carry ``status: failed``)."""
+    cand: Candidate
+    spec: object                 # the full SimSpec (json_hash for manifests)
+    attempts: int
+    reason: str
+    traceback: str = ""          # compact summary, last frames only
+
+
 @dataclass
 class EvalResult:
     cand: Candidate
@@ -157,6 +171,10 @@ class ExplorationResult:
     # MetricsRegistry snapshot of the sweep (counters/histograms); filled by
     # sweep(), empty for the legacy explore() path
     metrics: dict = field(default_factory=dict)
+    # quarantined candidates (FailedCandidate): exhausted retries or raised
+    # during evaluation under sweep(strict=False) — a category distinct from
+    # pruned (pruning is a *verdict*, failure is an execution outcome)
+    failed: tuple = ()
 
     def pareto(self, x=lambda r: r.tps_per_user, y=lambda r: r.tps_per_chip
                ) -> list[EvalResult]:

@@ -160,13 +160,18 @@ class SimCache:
         return pricing
 
     def save_persistent(self, pricing: dict | None = None, *,
-                        meta: dict | None = None) -> Path | None:
+                        meta: dict | None = None,
+                        path: str | Path | None = None) -> Path | None:
         """Atomically write the persisted buckets (+ engine pricing table)
         to the attached path.  No-op without :meth:`attach_persistent`.
 
         ``meta`` lets the caller stamp the file with the *current* engine
         state (recomputed at save time): entries priced after a profile-DB
-        mutation must never be described by the attach-time digest."""
+        mutation must never be described by the attach-time digest.
+        ``path`` overrides the destination without re-attaching — how sweep
+        worker processes write per-worker *shards* next to the main file
+        (merged by :func:`repro.core.simulator.merge_cache_shards`) instead
+        of racing each other on it."""
         if self.persist_path is None:
             return None
         if meta is not None:
@@ -176,17 +181,25 @@ class SimCache:
             "buckets": {b: self._data[b] for b in self.PERSISTED},
             "pricing": pricing or {},
         }
-        self.persist_path.parent.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=self.persist_path.parent,
-                                   prefix=self.persist_path.name + ".")
+        return atomic_pickle(Path(path) if path is not None
+                             else self.persist_path, blob)
+
+
+def atomic_pickle(path: Path, blob) -> Path:
+    """Pickle *blob* to *path* via tmp-file + ``os.replace`` so a concurrent
+    reader (or a crash mid-write) can never observe a partial file at the
+    final name.  Shared by the persistent tier and the shard merge."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent, prefix=path.name + ".")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            pickle.dump(blob, f, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)                # atomic vs concurrent runs
+    except BaseException:
         try:
-            with os.fdopen(fd, "wb") as f:
-                pickle.dump(blob, f, protocol=pickle.HIGHEST_PROTOCOL)
-            os.replace(tmp, self.persist_path)   # atomic vs concurrent runs
-        except BaseException:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
-        return self.persist_path
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return path

@@ -11,6 +11,7 @@ import hashlib
 import json
 import math
 import os
+import pickle
 from dataclasses import dataclass, field
 
 import jax
@@ -191,6 +192,20 @@ class Simulator:
         return self.cache.save_persistent(
             self.engine._cache if self.engine._cache else None,
             meta=self._persist_meta())
+
+    def save_cache_shard(self, tag: str):
+        """Write this process's cache as a per-worker *shard* next to the
+        attached persistent file (``<main>.<tag>.<pid>.shard``) instead of
+        racing other workers on the main path.  The sweep parent unions
+        shards back via :func:`merge_cache_shards` once workers are done.
+        No-op (None) without an attached persistent tier."""
+        if self.cache.persist_path is None:
+            return None
+        shard = self.cache.persist_path.with_name(
+            f"{self.cache.persist_path.name}.{tag}.{os.getpid()}.shard")
+        return self.cache.save_persistent(
+            self.engine._cache if self.engine._cache else None,
+            meta=self._persist_meta(), path=shard)
 
     def cache_stats(self) -> dict:
         """Hit/miss counters for every cache layer (benchmark telemetry)."""
@@ -507,3 +522,90 @@ class Simulator:
             detail={"t_fwd": dict(t_fwd), "t_bwd": dict(t_bwd),
                     "B_local": B_local, "par": par},
         )
+
+
+def merge_cache_shards(main_path, shard_paths, *, metrics=None) -> dict:
+    """Union per-worker cache shards into the main persistent file.
+
+    Robustness contract (tests/test_pool_robustness.py):
+
+    * a corrupt or partially-written shard (killed worker, injected
+      ``cache_corrupt``) is **quarantined** — renamed ``<shard>.corrupt``,
+      counted as ``pool.cache_shards_quarantined`` — and the sweep degrades
+      to cold pricing for those entries instead of raising;
+    * a shard whose metadata disagrees with the main file / its siblings
+      (stale worker from an older engine state) is skipped, never merged;
+    * the main file is rewritten atomically (tmp + ``os.replace``) and
+      merged shards are deleted, so a crash mid-merge leaves either the old
+      main or the new one — never a partial file.
+
+    Returns ``{"merged": n, "quarantined": n, "skipped": n, "path": ...}``.
+    """
+    from pathlib import Path
+
+    from repro.core.simcache import SimCache, atomic_pickle
+
+    main_path = Path(main_path)
+    summary = {"merged": 0, "quarantined": 0, "skipped": 0,
+               "path": str(main_path)}
+
+    def _load(path: Path) -> dict | None:
+        try:
+            with open(path, "rb") as f:
+                blob = pickle.load(f)
+            # shallow shape check: a truncated pickle usually raises above,
+            # but guard the layout too before trusting .get() results
+            if not isinstance(blob, dict) or "meta" not in blob:
+                raise ValueError("unexpected shard layout")
+            return blob
+        except FileNotFoundError:
+            return None
+        except Exception:
+            corrupt = path.with_name(path.name + ".corrupt")
+            try:
+                os.replace(path, corrupt)
+            except OSError:
+                pass
+            summary["quarantined"] += 1
+            if metrics is not None:
+                metrics.inc("pool.cache_shards_quarantined")
+            return None
+
+    base = _load(main_path) if main_path.exists() else None
+    meta = base["meta"] if base else None
+    buckets: dict[str, dict] = {b: {} for b in SimCache.PERSISTED}
+    pricing: dict = {}
+    if base:
+        for b in SimCache.PERSISTED:
+            buckets[b].update(base.get("buckets", {}).get(b) or {})
+        pricing.update(base.get("pricing") or {})
+
+    merged_paths = []
+    for path in sorted(Path(p) for p in shard_paths):
+        blob = _load(path)
+        if blob is None:
+            continue
+        if meta is None:
+            meta = blob["meta"]          # first good shard defines identity
+        if blob["meta"] != meta:
+            summary["skipped"] += 1      # stale worker: never merge
+            if metrics is not None:
+                metrics.inc("pool.cache_shards_skipped")
+            continue
+        for b in SimCache.PERSISTED:
+            buckets[b].update(blob.get("buckets", {}).get(b) or {})
+        pricing.update(blob.get("pricing") or {})
+        summary["merged"] += 1
+        merged_paths.append(path)
+
+    if summary["merged"]:
+        atomic_pickle(main_path, {"meta": meta, "buckets": buckets,
+                                  "pricing": pricing})
+        if metrics is not None:
+            metrics.inc("pool.cache_shards_merged", summary["merged"])
+    for path in merged_paths:
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+    return summary

@@ -334,6 +334,74 @@ class Helper:
 
 
 # ======================================================================
+# R6: exception hygiene in crash-recovery scopes
+# ======================================================================
+
+def test_r6_flags_bare_except(tmp_path):
+    rep = lint_snippet(tmp_path, "api/pool.py", """
+def retry(task):
+    try:
+        return task()
+    except:
+        return None
+""")
+    assert active_rules(rep) == ["R6"]
+    assert "bare" in rep.active[0].message
+
+
+def test_r6_flags_swallowed_control_exceptions(tmp_path):
+    rep = lint_snippet(tmp_path, "api/sweep.py", """
+def drain(q):
+    try:
+        return q.get()
+    except (KeyboardInterrupt, SystemExit):
+        return None
+
+
+def run(pool):
+    try:
+        pool.step()
+    except BaseException as e:
+        log(e)
+""")
+    assert active_rules(rep) == ["R6"] and len(rep.active) == 2
+    assert "KeyboardInterrupt" in rep.active[0].message
+
+
+def test_r6_passes_cleanup_then_reraise_and_narrow_handlers(tmp_path):
+    rep = lint_snippet(tmp_path, "core/simcache.py", """
+def atomic_write(path, blob):
+    try:
+        dump(path, blob)
+    except BaseException:
+        cleanup(path)
+        raise
+
+
+def evaluate(task):
+    try:
+        return task()
+    except Exception as e:       # retryable: narrow catch is the contract
+        return failed(e)
+""")
+    assert rep.active == ()
+
+
+def test_r6_scoped_to_recovery_files(tmp_path):
+    # the same swallow outside pool/sweep/chaos/simcache is not R6's beat
+    code = """
+def f(x):
+    try:
+        return x()
+    except BaseException:
+        return None
+"""
+    assert active_rules(lint_snippet(tmp_path, "core/engine2.py", code)) == []
+    assert active_rules(
+        lint_snippet(tmp_path, "analysis/chaos.py", code)) == ["R6"]
+
+
+# ======================================================================
 # engine mechanics: disable comments, scoping, CLI
 # ======================================================================
 
